@@ -1,0 +1,49 @@
+"""Fig. 2: cold-start latency breakdown (vanilla snapshots) vs warm latency.
+
+Per function: Load-VMM / connection-restore / function-processing for a
+cold invocation from the guest memory file, against the warm (memory-
+resident) invocation latency, plus the fraction of processing spent
+serving page faults (the paper reports ~95% on average).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import common
+
+
+def run(functions=None, verbose=True):
+    from repro.core import ReapConfig
+    from repro.serving import Orchestrator
+
+    fns = functions or common.bench_functions()
+    orch = Orchestrator(common.ensure_store(), mode="vanilla",
+                        reap=ReapConfig())
+    rows = []
+    for name, cfg in fns.items():
+        req = common.make_request(cfg, seed=1)
+        orch.register(name, cfg, warmup_batch=req)
+        common.drop_caches()
+        _, cold = orch.invoke(name, req, force_cold=True)
+        # warm: same instance, re-invoke twice and take the second
+        orch.invoke(name, req)
+        _, warm = orch.invoke(name, req)
+        fault_frac = cold.fault_s / max(cold.processing_s, 1e-9)
+        rows.append((f"{name}.cold_total", cold.total_s * 1e6,
+                     f"vmm={cold.load_vmm_s*1e3:.1f}ms"
+                     f" conn={cold.connection_s*1e3:.2f}ms"
+                     f" proc={cold.processing_s*1e3:.1f}ms"
+                     f" fault_frac={fault_frac:.2f}"))
+        rows.append((f"{name}.warm", warm.processing_s * 1e6,
+                     f"cold/warm={cold.total_s/max(warm.processing_s,1e-9):.1f}x"))
+        if verbose:
+            print(f"  {name:28s} cold={cold.total_s*1e3:7.1f}ms "
+                  f"(faults {cold.n_faults}, {fault_frac*100:.0f}% of proc) "
+                  f"warm={warm.processing_s*1e3:6.1f}ms")
+        orch.scale_to_zero(name)
+    common.write_rows("cold_warm", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

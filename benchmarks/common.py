@@ -1,0 +1,62 @@
+"""Shared benchmark machinery.
+
+The 10 assigned architectures (bench-reduced) ARE our FunctionBench
+analogue (Table 1): a diverse suite of serverless ML functions with small
+per-invocation compute and 10-100MB state.  Real disk I/O throughout;
+``drop_caches`` gives true cold reads (O_DIRECT paths bypass the page cache
+anyway, buffered paths get a genuine cold cache).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+STORE = os.path.join(ROOT, ".bench_store")
+RESULTS = os.path.join(ROOT, "results", "bench")
+
+# functions with "large inputs" in the paper's sense (image/audio payloads
+# or input-dependent expert routing -> lower page reuse, Fig. 5)
+LARGE_INPUT = {"pixtral-12b", "seamless-m4t-medium", "deepseek-moe-16b",
+               "llama4-maverick-400b-a17b"}
+
+
+def bench_functions():
+    from repro.configs import ARCHS
+    from repro.configs.base import reduce_for_bench
+    return {name: reduce_for_bench(cfg) for name, cfg in ARCHS.items()}
+
+
+def make_request(cfg, seed: int, batch: int = 1, seq: int = 64):
+    from repro.launch import steps
+    return steps.make_batch(cfg, seq, batch, "train", jax.random.key(seed))
+
+
+def drop_caches() -> None:
+    try:
+        os.sync()
+        with open("/proc/sys/vm/drop_caches", "w") as f:
+            f.write("3")
+    except OSError:
+        pass  # not privileged; O_DIRECT paths are still cache-free
+
+
+def ensure_store(rebuild: bool = False) -> str:
+    os.makedirs(STORE, exist_ok=True)
+    return STORE
+
+
+def write_rows(name: str, rows: list[tuple]) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name + ".csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:8.1f}ms"

@@ -1,0 +1,56 @@
+"""Fig. 3: contiguity of faulted guest-memory pages.
+
+Average length of contiguous page runs in the fault trace -- the paper
+finds 2-3 pages (up to ~5 for lr_training), which is why OS read-ahead
+cannot help the lazy-paging baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+
+
+def run_lengths(trace: list[int]) -> list[int]:
+    if not trace:
+        return [0]
+    runs, cur = [], 1
+    for a, b in zip(trace, trace[1:]):
+        if b == a + 1:
+            cur += 1
+        else:
+            runs.append(cur)
+            cur = 1
+    runs.append(cur)
+    return runs
+
+
+def run(functions=None, verbose=True):
+    from repro.core import GuestMemoryFile, InstanceArena, run_invocation
+    from repro.core.snapshot import build_instance_snapshot
+    import os
+
+    fns = functions or common.bench_functions()
+    store = common.ensure_store()
+    rows = []
+    for name, cfg in fns.items():
+        base = os.path.join(store, name)
+        if not os.path.exists(base + ".mem"):
+            build_instance_snapshot(cfg, base)
+        gm = GuestMemoryFile.open(base)
+        arena = InstanceArena(gm)
+        run_invocation(cfg, arena, common.make_request(cfg, seed=1))
+        runs = run_lengths(arena.stats.trace)
+        mean_run = float(np.mean(runs))
+        p90 = float(np.percentile(runs, 90))
+        rows.append((f"{name}.contiguity", mean_run,
+                     f"p90={p90:.0f} n_runs={len(runs)}"))
+        if verbose:
+            print(f"  {name:28s} mean_run={mean_run:6.1f} pages p90={p90:.0f}")
+        arena.close()
+    common.write_rows("contiguity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig. 4: booted-instance footprint vs snapshot-restore working set.
+
+The booted image carries boot-only state (fp32 master weights + optimizer
+moments -- the guest-OS/init analogue); an invocation from a snapshot only
+touches the serving working set.  The paper reports a 61-96% reduction.
+"""
+from __future__ import annotations
+
+import os
+
+from . import common
+
+
+def run(functions=None, verbose=True):
+    from repro.core import GuestMemoryFile, InstanceArena, run_invocation
+    from repro.core.snapshot import build_instance_snapshot, booted_footprint_bytes
+
+    fns = functions or common.bench_functions()
+    store = common.ensure_store()
+    rows = []
+    for name, cfg in fns.items():
+        base = os.path.join(store, name)
+        if not os.path.exists(base + ".mem"):
+            build_instance_snapshot(cfg, base)
+        booted = booted_footprint_bytes(cfg)
+        gm = GuestMemoryFile.open(base)
+        arena = InstanceArena(gm)
+        run_invocation(cfg, arena, common.make_request(cfg, seed=1))
+        ws = arena.resident_bytes
+        rows.append((f"{name}.booted_mb", booted / 1e6, ""))
+        rows.append((f"{name}.ws_mb", ws / 1e6,
+                     f"reduction={100*(1-ws/booted):.0f}%"))
+        if verbose:
+            print(f"  {name:28s} booted={booted/1e6:7.1f}MB "
+                  f"ws={ws/1e6:6.1f}MB  (-{100*(1-ws/booted):.0f}%)")
+        arena.close()
+    common.write_rows("footprint", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

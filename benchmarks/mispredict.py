@@ -1,0 +1,63 @@
+"""§7.1: REAP mispredictions -- prefetched-but-unused pages.
+
+The fraction of prefetched pages an invocation with a *different* input
+does not touch; the paper finds it tracks the unique-page fraction (3-39%)
+and only costs bandwidth, never correctness.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from . import common
+
+
+def run(functions=None, verbose=True):
+    from repro.core import (GuestMemoryFile, InstanceArena, ReapConfig,
+                            run_invocation)
+    from repro.core import reap as reap_mod
+    from repro.core.snapshot import build_instance_snapshot
+
+    fns = functions or common.bench_functions()
+    store = common.ensure_store()
+    rows = []
+    for name, cfg in fns.items():
+        base = os.path.join(store, name)
+        if not os.path.exists(base + ".mem"):
+            build_instance_snapshot(cfg, base)
+        if not reap_mod.has_record(base):
+            gm = GuestMemoryFile.open(base)
+            ar = InstanceArena(gm)
+            run_invocation(cfg, ar, common.make_request(cfg, seed=1))
+            reap_mod.write_record(base, ar.stats.trace)
+            ar.close()
+        # prefetch, then serve a different input and see what was unused
+        arena = InstanceArena(GuestMemoryFile.open(base))
+        n_pref, _ = reap_mod.prefetch(arena, base, ReapConfig())
+        pre_resident = arena.resident.copy()
+        arena.stats.trace.clear()
+        run_invocation(cfg, arena, common.make_request(cfg, seed=31337))
+        used = set(arena.stats.trace)  # residual faults only
+        # touched pages among prefetched: recompute by re-running the access
+        # trace on a fresh arena
+        arena2 = InstanceArena(GuestMemoryFile.open(base))
+        run_invocation(cfg, arena2, common.make_request(cfg, seed=31337))
+        needed = set(arena2.stats.trace)
+        prefetched = set(int(i) for i in np.load(reap_mod.trace_path(base)))
+        unused = len(prefetched - needed)
+        frac = unused / max(len(prefetched), 1)
+        residual = len(needed - prefetched)
+        rows.append((f"{name}.mispredict_frac", frac * 100,
+                     f"unused={unused}/{len(prefetched)} residual={residual}"))
+        if verbose:
+            print(f"  {name:28s} mispredicted={frac*100:5.1f}%  "
+                  f"residual_faults={residual}")
+        arena.close()
+        arena2.close()
+    common.write_rows("mispredict", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

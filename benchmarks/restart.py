@@ -1,0 +1,52 @@
+"""(Beyond-paper) REAP-accelerated training restart.
+
+A training checkpoint restore is REAP's ideal case: the working set is 100%
+of the file and perfectly stable.  Compares page-by-page lazy restore (the
+vanilla-snapshot baseline applied to restart) with the single-large-read
+REAP restore -- fault-tolerance MTTR at cluster scale is dominated by
+exactly this path.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+from . import common
+
+
+def run(function: str = "olmo-1b", verbose=True):
+    import jax
+
+    from repro.configs.base import reduce_for_bench
+    from repro.configs import ARCHS
+    from repro.launch import steps as steps_lib
+    from repro.training import optimizer as opt_lib
+    from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+    cfg = reduce_for_bench(ARCHS[function])
+    params = steps_lib.init_params(cfg, jax.random.key(0))
+    opt = opt_lib.OptConfig()
+    opt_state = opt_lib.init_state(params, opt)
+    wd = os.path.join(common.STORE, "restart_ckpt")
+    os.makedirs(wd, exist_ok=True)
+    base = save_checkpoint(os.path.join(wd, "ckpt"), params, opt_state, 123)
+
+    rows = []
+    for mode in ("lazy", "reap"):
+        common.drop_caches()
+        _, _, step, stats = restore_checkpoint(base, params, opt_state,
+                                               mode=mode)
+        assert step == 123
+        bw = stats["bytes"] / max(stats["io_s"], 1e-9) / 1e6
+        rows.append((f"restore.{mode}", stats["io_s"] * 1e6,
+                     f"bytes={stats['bytes']/1e6:.0f}MB bw={bw:.0f}MB/s "
+                     f"faults={stats['n_faults']}"))
+        if verbose:
+            print(f"  restore[{mode:4s}] {stats['io_s']*1e3:8.1f}ms  "
+                  f"{bw:7.0f}MB/s  faults={stats['n_faults']}")
+    common.write_rows("restart", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig. 5: guest-memory page reuse across invocations with different inputs.
+
+Dense weights are fully stable; embedding rows and routed experts vary with
+the input -- the paper's "unique pages" (>=97% identical for 7/10
+functions; lower for large-input functions).
+"""
+from __future__ import annotations
+
+import os
+
+from . import common
+
+
+def page_set(cfg, base, seed):
+    from repro.core import GuestMemoryFile, InstanceArena, run_invocation
+    gm = GuestMemoryFile.open(base)
+    arena = InstanceArena(gm)
+    run_invocation(cfg, arena, common.make_request(cfg, seed=seed))
+    pages = set(arena.stats.trace)
+    arena.close()
+    return pages
+
+
+def run(functions=None, verbose=True):
+    from repro.core.snapshot import build_instance_snapshot
+
+    fns = functions or common.bench_functions()
+    store = common.ensure_store()
+    rows = []
+    for name, cfg in fns.items():
+        base = os.path.join(store, name)
+        if not os.path.exists(base + ".mem"):
+            build_instance_snapshot(cfg, base)
+        a = page_set(cfg, base, seed=1)
+        b = page_set(cfg, base, seed=202)
+        same = len(a & b)
+        frac = same / max(len(b), 1)
+        rows.append((f"{name}.reuse_frac", frac * 100,
+                     f"same={same} uniq_b={len(b - a)} large_input="
+                     f"{name in common.LARGE_INPUT}"))
+        if verbose:
+            print(f"  {name:28s} same={frac*100:5.1f}%  unique={len(b-a)}")
+    common.write_rows("reuse", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

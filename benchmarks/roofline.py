@@ -1,0 +1,56 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and prints compute / memory / collective terms, the dominant bottleneck,
+and the MODEL_FLOPS utilization bound for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import common
+
+DRYRUN_DIR = os.path.join(common.ROOT, "results", "dryrun")
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    if mesh:
+        cells = [c for c in cells if c["mesh"] == mesh]
+    return cells
+
+
+def run(verbose=True):
+    rows = []
+    cells = load_cells()
+    for c in cells:
+        key = f"{c['arch']}.{c['shape']}.{c['mesh']}"
+        if c["status"] == "skipped":
+            rows.append((key, 0, "skipped: " + c["reason"][:40]))
+            continue
+        if c["status"] != "ok":
+            rows.append((key, -1, "ERROR"))
+            continue
+        r = c["roofline"]
+        rows.append((key, r["step_s"] * 1e6,
+                     f"bottleneck={r['bottleneck']} "
+                     f"comp={r['compute_s']*1e3:.1f}ms "
+                     f"mem={r['memory_s']*1e3:.1f}ms "
+                     f"coll={r['collective_s']*1e3:.1f}ms "
+                     f"roofline_frac={r['roofline_fraction']:.3f} "
+                     f"peak={c['peak_bytes_per_device']/1e9:.1f}GB"))
+        if verbose:
+            print(f"  {key:48s} {r['bottleneck']:10s} "
+                  f"step={r['step_s']*1e3:9.1f}ms "
+                  f"frac={r['roofline_fraction']:.3f}")
+    common.write_rows("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Benchmark driver: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only <name>]``
+prints ``name,us_per_call,derived`` CSV rows for every benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+SECTIONS = [
+    ("cold_warm", "Fig 2: cold vs warm latency breakdown"),
+    ("contiguity", "Fig 3: faulted-page contiguity"),
+    ("footprint", "Fig 4: booted footprint vs working set"),
+    ("reuse", "Fig 5: page reuse across inputs"),
+    ("reap_steps", "Fig 7: REAP optimization ladder"),
+    ("functionbench", "Fig 8: baseline vs REAP cold starts"),
+    ("scalability", "Fig 9: concurrent cold starts"),
+    ("record_overhead", "S6.4: record-phase overhead"),
+    ("mispredict", "S7.1: mispredicted pages"),
+    ("restart", "beyond-paper: REAP training restart"),
+    ("roofline", "SRoofline: dry-run derived terms"),
+]
+
+QUICK_FUNCTIONS = ["olmo-1b", "qwen2-7b", "deepseek-moe-16b", "rwkv6-7b"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of functions for a fast pass")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import common
+    fns = None
+    if args.quick:
+        all_fns = common.bench_functions()
+        fns = {k: all_fns[k] for k in QUICK_FUNCTIONS}
+
+    all_rows: list[tuple] = []
+    for name, title in SECTIONS:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"== {title} ==", flush=True)
+        t0 = time.perf_counter()
+        try:
+            import inspect
+            kwargs = {}
+            if "functions" in inspect.signature(mod.run).parameters and fns:
+                kwargs["functions"] = fns
+            rows = mod.run(**kwargs)
+            all_rows.extend(rows)
+        except Exception as e:  # keep the harness going; report at the end
+            import traceback
+            traceback.print_exc()
+            all_rows.append((f"{name}.FAILED", -1, str(e)[:80]))
+        print(f"   ({time.perf_counter()-t0:.1f}s)", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for r in all_rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

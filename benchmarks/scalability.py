@@ -1,0 +1,74 @@
+"""Fig. 9: cold-start latency vs number of concurrently-arriving functions.
+
+N independent functions cold-start at once; REAP should stay relatively
+flat (one big read each, I/O overlaps across instances) while the baseline
+degrades (serial 4 KB faults contend for the disk).  This container has a
+single CPU core, so the reproduction target is the *shape* of the curves.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import time
+
+from . import common
+
+CONCURRENCY = (1, 2, 4, 8, 16)
+
+
+def run(function: str = "olmo-1b", verbose=True):
+    from repro.core import (GuestMemoryFile, InstanceArena, ReapConfig,
+                            run_invocation)
+    from repro.core import reap as reap_mod
+    from repro.core.executor import warm_executables
+    from repro.core.snapshot import build_instance_snapshot
+
+    cfg = common.bench_functions()[function]
+    store = common.ensure_store()
+    warm_executables(cfg, common.make_request(cfg, seed=1))
+    nmax = max(CONCURRENCY)
+    bases = []
+    for i in range(nmax):
+        b = os.path.join(store, f"scale_{function}_{i}")
+        if not os.path.exists(b + ".mem"):
+            build_instance_snapshot(cfg, b, seed=i, include_boot=False)
+        # record for REAP mode
+        if not reap_mod.has_record(b):
+            gm = GuestMemoryFile.open(b)
+            ar = InstanceArena(gm)
+            run_invocation(cfg, ar, common.make_request(cfg, seed=i))
+            reap_mod.write_record(b, ar.stats.trace)
+            ar.close()
+        bases.append(b)
+
+    def cold(base, mode, seed):
+        gm = GuestMemoryFile.open(base)
+        arena = InstanceArena(gm, o_direct=True)
+        t0 = time.perf_counter()
+        if mode == "reap":
+            reap_mod.prefetch(arena, base, ReapConfig())
+        run_invocation(cfg, arena, common.make_request(cfg, seed=seed))
+        dt = time.perf_counter() - t0
+        arena.close()
+        return dt
+
+    rows = []
+    for mode in ("vanilla", "reap"):
+        for n in CONCURRENCY:
+            common.drop_caches()
+            t0 = time.perf_counter()
+            with cf.ThreadPoolExecutor(n) as ex:
+                lats = list(ex.map(lambda i: cold(bases[i], mode, i), range(n)))
+            wall = time.perf_counter() - t0
+            mean = sum(lats) / n
+            rows.append((f"{mode}.n{n}", mean * 1e6,
+                         f"wall={wall*1e3:.0f}ms"))
+            if verbose:
+                print(f"  {mode:8s} n={n:2d}  mean={mean*1e3:7.1f}ms "
+                      f"wall={wall*1e3:7.1f}ms")
+    common.write_rows("scalability", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

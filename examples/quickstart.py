@@ -1,0 +1,52 @@
+"""Quickstart: deploy a serverless ML function, watch REAP slash its
+cold-start, all through the public API.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch qwen2-7b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SMOKES  # noqa: E402
+from repro.core import ReapConfig  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.serving import Orchestrator  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=list(ARCHS))
+    ap.add_argument("--store", default=".quickstart_store")
+    args = ap.parse_args()
+
+    cfg = SMOKES[args.arch]  # reduced same-family config (CPU-scale)
+    request = steps.make_batch(cfg, seq=64, batch=1, kind="train",
+                               key=jax.random.key(0))
+
+    orch = Orchestrator(args.store, mode="reap", reap=ReapConfig())
+    print(f"deploying {cfg.name} (builds the snapshot on first deploy)...")
+    orch.register(args.arch, cfg, warmup_batch=request)
+
+    print("\n1) first cold invocation (REAP record phase):")
+    _, r = orch.invoke(args.arch, request, force_cold=True)
+    print(f"   load_vmm={r.load_vmm_s*1e3:.1f}ms conn={r.connection_s*1e3:.2f}ms "
+          f"processing={r.processing_s*1e3:.1f}ms  page_faults={r.n_faults}")
+
+    print("2) warm invocation (instance stayed resident):")
+    _, r = orch.invoke(args.arch, request)
+    print(f"   processing={r.processing_s*1e3:.1f}ms  page_faults={r.n_faults}")
+
+    orch.scale_to_zero(args.arch)
+    print("3) cold again -- but now REAP prefetches the working set:")
+    _, r = orch.invoke(args.arch, request, force_cold=True)
+    print(f"   prefetch={r.prefetch_s*1e3:.1f}ms ({r.n_prefetched_pages} pages, "
+          f"one O_DIRECT read) processing={r.processing_s*1e3:.1f}ms "
+          f"page_faults={r.n_faults}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Scenario: a multi-tenant worker serving ALL TEN assigned architectures
+as serverless functions with batched requests, keepalive-driven
+scale-to-zero, and REAP-accelerated cold starts.
+
+    PYTHONPATH=src python examples/serve_fleet.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SMOKES  # noqa: E402
+from repro.core import ReapConfig  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.serving import Orchestrator  # noqa: E402
+
+
+def main():
+    store = ".fleet_store"
+    orch = Orchestrator(store, mode="reap", reap=ReapConfig(),
+                        keepalive_s=2.0, warm_limit=4)
+    requests = {}
+    for name in ARCHS:
+        cfg = SMOKES[name]
+        requests[name] = steps.make_batch(cfg, seq=48, batch=2, kind="train",
+                                          key=jax.random.key(hash(name) % 2**31))
+        orch.register(name, cfg, warmup_batch=requests[name])
+        print(f"deployed {name}")
+
+    # round 1: every function cold (record phase)
+    print("\n-- round 1: cold starts (record) --")
+    for name in ARCHS:
+        _, r = orch.invoke(name, requests[name])
+        print(f"  {name:28s} total={r.total_s*1e3:7.1f}ms faults={r.n_faults}")
+
+    # idle long enough for the autoscaler to reclaim everything
+    time.sleep(2.2)
+    n = orch.reap_idle()
+    print(f"\nautoscaler reclaimed {n} idle instances (scale-to-zero)")
+
+    # round 2: cold again, now with REAP prefetch
+    print("\n-- round 2: cold starts (REAP prefetch) --")
+    for name in ARCHS:
+        _, r = orch.invoke(name, requests[name])
+        print(f"  {name:28s} total={r.total_s*1e3:7.1f}ms "
+              f"prefetch={r.prefetch_s*1e3:5.1f}ms faults={r.n_faults}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Scenario: end-to-end fault-tolerant training driver.
+
+Trains a reduced model for a few hundred steps, gets preempted halfway,
+restarts from the async checkpoint with a REAP single-read restore, and
+verifies the loss trajectory is identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/train_fault_tolerant.py [--steps 200]
+"""
+import argparse
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SMOKES  # noqa: E402
+from repro.data import synthesize_corpus  # noqa: E402
+from repro.training import (OptConfig, SimulatedPreemption, Trainer,  # noqa: E402
+                            TrainLoopConfig)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workdir", default=".ft_train")
+    args = ap.parse_args()
+
+    cfg = SMOKES[args.arch]
+    shutil.rmtree(args.workdir, ignore_errors=True)
+    os.makedirs(args.workdir)
+    corpus = synthesize_corpus(os.path.join(args.workdir, "corpus.bin"),
+                               2_000_000, cfg.vocab)
+    loop = TrainLoopConfig(total_steps=args.steps, checkpoint_every=25,
+                           batch_size=8, seq_len=64, restore_mode="reap")
+    opt = OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+
+    print(f"training {cfg.name} for {args.steps} steps, "
+          f"preempting at step {args.steps // 2}...")
+    tr = Trainer(cfg, opt, loop, corpus, os.path.join(args.workdir, "ckpt"),
+                 preempt_at=args.steps // 2)
+    try:
+        tr.run()
+    except SimulatedPreemption as e:
+        print(f"  !! node lost: {e}")
+
+    print("restarting from checkpoint (REAP single-read restore)...")
+    out = Trainer(cfg, opt, loop, corpus,
+                  os.path.join(args.workdir, "ckpt")).run()
+    rs = out["restore_stats"]
+    print(f"  restored {rs['bytes']/1e6:.0f}MB in {rs['io_s']*1e3:.0f}ms "
+          f"({rs['n_faults']} faults)")
+    print(f"  finished at step {out['final_step']}; "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+    print("verifying against an uninterrupted run...")
+    ref = Trainer(cfg, opt, loop, corpus,
+                  os.path.join(args.workdir, "ckpt_ref")).run()
+    tail = max(abs(a - b) for a, b in zip(out["losses"][-5:],
+                                          ref["losses"][-5:]))
+    print(f"  max tail-loss divergence: {tail:.2e} "
+          f"({'OK' if tail < 1e-2 else 'MISMATCH'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+import sys, dataclasses
+import jax, jax.numpy as jnp
+sys.path.insert(0, "/root/repo/src")
+from repro.configs import SMOKES
+from repro.launch import steps
+
+failures = []
+for name, cfg in SMOKES.items():
+    try:
+        if cfg.n_experts:  # no-drop capacity so teacher-forced == decode
+            cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+        key = jax.random.key(1)
+        params = steps.init_params(cfg, key)
+        B, S, EXTRA = 2, 32, 4
+        full = steps.make_batch(cfg, S + EXTRA, B, "train", key)
+        fwd = steps.build_forward(cfg)
+        ref_logits = fwd(params, full)
+        n_img = full["patch_embeds"].shape[1] if cfg.family == "vlm" else 0
+        n_txt = full["tokens"].shape[1]
+        S = n_txt - EXTRA  # prompt length in *text* tokens
+
+        max_len = n_txt + EXTRA + n_img
+        cache = steps.init_cache(cfg, B, max_len)
+        pre_batch = dict(full)
+        pre_batch["tokens"] = full["tokens"][:, :S]
+        prefill = steps.build_prefill_step(cfg)
+        dec = steps.build_decode_step(cfg)
+        logits, cache = prefill(params, pre_batch, cache)
+        ref_pf = ref_logits[:, n_img + S - 1, :]
+        err = float(jnp.max(jnp.abs(logits[:, -1, :].astype(jnp.float32) - ref_pf.astype(jnp.float32))))
+        assert err < 0.15, f"prefill mismatch {err}"
+
+        for i in range(EXTRA):
+            db = {"tokens": full["tokens"][:, S + i][:, None]}
+            pos = n_img + S + i
+            logits, cache = dec(params, cache, db, pos)
+            ref_d = ref_logits[:, n_img + S + i, :]
+            err = float(jnp.max(jnp.abs(logits[:, -1, :].astype(jnp.float32) - ref_d.astype(jnp.float32))))
+            assert err < 0.2, f"decode step {i} mismatch {err}"
+        print(f"[OK decode] {name}")
+    except Exception as e:
+        import traceback; traceback.print_exc()
+        failures.append(name)
+        print(f"[FAIL] {name}: {e}")
+print("FAILURES:", failures)

@@ -1,0 +1,62 @@
+import sys, time, shutil, os
+sys.path.insert(0, "/root/repo/src")
+import numpy as np
+import jax.numpy as jnp
+from repro.configs import SMOKES
+from repro.core import (GuestMemoryFile, InstanceArena, Monitor, ReapConfig,
+                        build_instance_snapshot, run_invocation)
+from repro.launch import steps
+import jax
+
+store = "/root/repo/.devstore"
+shutil.rmtree(store, ignore_errors=True)
+os.makedirs(store)
+
+for name in ["qwen2-7b", "deepseek-moe-16b", "pixtral-12b"]:
+    cfg = SMOKES[name]
+    base = f"{store}/{name}"
+    gm = build_instance_snapshot(cfg, base, seed=3)
+    key = jax.random.key(3)
+    batch = steps.make_batch(cfg, 32, 2, "train", key)
+
+    # warm reference with the same (host-initialized) params
+    from repro.nn import spec as nnspec
+    from repro.models import get_family
+    fam = get_family(cfg)
+    host = nnspec.host_initialize(fam.param_specs(cfg), seed=3)
+    params = nnspec.map_leaves(lambda p, s: jnp.asarray(host[p]), fam.param_specs(cfg))
+    ref = fam.forward(cfg, params, batch)
+
+    # record phase
+    rc = ReapConfig()
+    mon = Monitor(gm, base, rc)
+    assert mon.mode == "record"
+    mon.start()
+    logits, secs = run_invocation(cfg, mon.arena, batch)
+    err = float(jnp.max(jnp.abs(logits.astype(jnp.float32) - ref.astype(jnp.float32))))
+    info = mon.finish()
+    print(f"{name}: record faults={info['n_faults']} fault_s={info['fault_s']:.3f} "
+          f"ws_pages={info['ws_pages']} err={err:.2e} t={secs:.3f}s")
+    assert err < (0.08 if cfg.n_experts else 1e-2), err
+
+    # prefetch phase
+    mon2 = Monitor(gm, base, rc)
+    assert mon2.mode == "prefetch"
+    mon2.start()
+    logits2, secs2 = run_invocation(cfg, mon2.arena, batch)
+    err2 = float(jnp.max(jnp.abs(logits2.astype(jnp.float32) - ref.astype(jnp.float32))))
+    info2 = mon2.finish()
+    print(f"{name}: prefetch residual_faults={info2['n_faults']} "
+          f"prefetched={info2['prefetched_pages']} prefetch_s={info2['prefetch_s']:.4f} "
+          f"err={err2:.2e} t={secs2:.3f}s")
+    assert err2 < (0.08 if cfg.n_experts else 1e-2)
+
+    # different input: residual faults should be small but nonzero (unique pages)
+    batch3 = steps.make_batch(cfg, 32, 2, "train", jax.random.key(99))
+    mon3 = Monitor(gm, base, rc)
+    mon3.start()
+    logits3, secs3 = run_invocation(cfg, mon3.arena, batch3)
+    info3 = mon3.finish()
+    print(f"{name}: new-input residual_faults={info3['n_faults']} "
+          f"ratio={info3.get('residual_ratio', 0):.3f} t={secs3:.3f}s")
+print("REAP core OK")

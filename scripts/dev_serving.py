@@ -1,0 +1,36 @@
+import sys, shutil
+sys.path.insert(0, "/root/repo/src")
+import jax
+from repro.configs import SMOKES
+from repro.serving import Orchestrator
+from repro.core import ReapConfig
+from repro.launch import steps
+
+shutil.rmtree("/root/repo/.devstore2", ignore_errors=True)
+orch = Orchestrator("/root/repo/.devstore2", mode="reap", keepalive_s=0.2)
+cfg = SMOKES["qwen2-7b"]
+batch = steps.make_batch(cfg, 32, 2, "train", jax.random.key(0))
+orch.register("fn-qwen", cfg, seed=5, warmup_batch=batch)
+
+# 1st invocation: cold + record
+_, r1 = orch.invoke("fn-qwen", batch)
+print(f"cold#1 (record): vmm={r1.load_vmm_s*1e3:.1f}ms conn={r1.connection_s*1e6:.0f}us "
+      f"proc={r1.processing_s*1e3:.0f}ms faults={r1.n_faults}")
+# 2nd: warm (instance kept)
+_, r2 = orch.invoke("fn-qwen", batch)
+print(f"warm:            proc={r2.processing_s*1e3:.1f}ms faults={r2.n_faults}")
+# scale to zero, then cold with REAP prefetch
+orch.scale_to_zero("fn-qwen")
+_, r3 = orch.invoke("fn-qwen", batch)
+print(f"cold#2 (REAP):   vmm={r3.load_vmm_s*1e3:.1f}ms prefetch={r3.prefetch_s*1e3:.1f}ms "
+      f"({r3.n_prefetched_pages}p) proc={r3.processing_s*1e3:.0f}ms faults={r3.n_faults}")
+# keepalive sweep
+import time; time.sleep(0.3)
+n = orch.reap_idle()
+print("reclaimed:", n)
+# vanilla orchestrator for comparison
+orch2 = Orchestrator("/root/repo/.devstore2", mode="vanilla")
+orch2.register("fn-qwen", cfg, seed=5, warmup_batch=batch)
+_, r4 = orch2.invoke("fn-qwen", batch, force_cold=True)
+print(f"cold vanilla:    proc={r4.processing_s*1e3:.0f}ms faults={r4.n_faults} fault_s={r4.fault_s*1e3:.0f}ms")
+print("serving OK")

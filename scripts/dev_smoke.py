@@ -1,0 +1,25 @@
+import sys
+import jax, jax.numpy as jnp
+import numpy as np
+sys.path.insert(0, "/root/repo/src")
+from repro.configs import SMOKES
+from repro.launch import steps
+from repro.nn import spec as nnspec
+
+failures = []
+for name, cfg in SMOKES.items():
+    try:
+        key = jax.random.key(0)
+        params = steps.init_params(cfg, key)
+        B, S = 2, 64
+        batch = steps.make_batch(cfg, S, B, "train", key)
+        fwd = steps.build_forward(cfg)
+        logits = fwd(params, batch)
+        assert not bool(jnp.any(jnp.isnan(logits))), "NaN logits"
+        fam_loss = steps.build_train_step(cfg, __import__("repro.training.optimizer", fromlist=["OptConfig"]).OptConfig(), remat=False)
+        print(f"[OK fwd] {name}: logits {logits.shape}")
+    except Exception as e:
+        import traceback; traceback.print_exc()
+        failures.append((name, str(e)[:200]))
+        print(f"[FAIL] {name}: {e}")
+print("FAILURES:", [f[0] for f in failures])

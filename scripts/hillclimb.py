@@ -1,0 +1,62 @@
+"""§Perf hillclimb driver: run the three chosen cells through their
+iteration ladders, writing tagged JSONs to results/perf/."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "/root/repo/src")
+import json
+
+from repro.launch.dryrun import run_cell
+
+OUT = "/root/repo/results/perf"
+
+def show(r):
+    if r["status"] != "ok":
+        print("   ERROR:", r.get("error", "")[:300]); return
+    roof = r["roofline"]
+    print(f"   peak={r['peak_bytes_per_device']/1e9:6.2f}GB "
+          f"step={roof['step_s']:8.3f}s [{roof['bottleneck']}] "
+          f"comp={roof['compute_s']:.3f}s mem={roof['memory_s']:.3f}s "
+          f"coll={roof['collective_s']:.4f}s "
+          f"useful={roof['useful_flops_ratio']:.3f} frac={roof['roofline_fraction']:.4f}")
+
+RUNS = [
+    # Cell A: qwen1.5-110b train_4k single — representative big-model training
+    ("A1_grad_shard", "qwen1.5-110b", "train_4k", "single", {}, {}),
+    ("A2_bf16_grads", "qwen1.5-110b", "train_4k", "single", {}, {"grad_dtype": "bfloat16"}),
+    ("A3_dots_policy", "qwen1.5-110b", "train_4k", "single", {},
+     {"grad_dtype": "bfloat16", "remat_policy": "dots_with_no_batch_dims_saveable"}),
+    # Cell B: qwen1.5-110b decode_32k single — serving path (paper-representative)
+    ("B1_int8_kv", "qwen1.5-110b", "decode_32k", "single",
+     {"kv_cache_dtype": "int8"}, {}),
+    # Cell C: deepseek-moe prefill_32k multi — worst replication / collective
+    ("C1_expert_cap_shard", "deepseek-moe-16b", "prefill_32k", "multi", {}, {}),
+    ("C2_cap_factor1", "deepseek-moe-16b", "prefill_32k", "multi",
+     {"capacity_factor": 1.0}, {}),
+]
+
+only = sys.argv[1:] or None
+for tag, arch, shape, mesh, cfg_ov, ov in RUNS:
+    if only and not any(tag.startswith(o) for o in only):
+        continue
+    print(f"== {tag}: {arch} x {shape} x {mesh} {cfg_ov} {ov}")
+    r = run_cell(arch, shape, mesh, OUT, cfg_overrides=cfg_ov, tag=tag, **ov)
+    show(r)
+
+EXTRA = [
+    ("A4_ce_chunk4k", "qwen1.5-110b", "train_4k", "single",
+     {"ce_chunk": 4096}, {}),
+    ("A5_attn_chunk2k", "qwen1.5-110b", "train_4k", "single",
+     {"attn_chunk": 2048}, {}),
+    ("B2_int8_kv_multi", "qwen1.5-110b", "decode_32k", "multi",
+     {"kv_cache_dtype": "int8"}, {}),
+    ("C3_revert_expert_shard", "deepseek-moe-16b", "prefill_32k", "multi", {}, {}),
+    ("C4_cap1_and_microchunk", "deepseek-moe-16b", "prefill_32k", "multi",
+     {"capacity_factor": 1.0}, {}),
+]
+for tag, arch, shape, mesh, cfg_ov, ov in EXTRA:
+    if only and not any(tag.startswith(o) for o in only):
+        continue
+    print(f"== {tag}: {arch} x {shape} x {mesh} {cfg_ov} {ov}")
+    r = run_cell(arch, shape, mesh, OUT, cfg_overrides=cfg_ov, tag=tag, **ov)
+    show(r)

@@ -1,0 +1,96 @@
+"""Generate the §Dry-run / §Roofline markdown tables from results/dryrun."""
+import glob
+import json
+import os
+import sys
+
+DRY = "/root/repo/results/dryrun"
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["qwen1.5-110b", "qwen2-7b", "mistral-nemo-12b", "olmo-1b",
+         "zamba2-1.2b", "deepseek-moe-16b", "llama4-maverick-400b-a17b",
+         "seamless-m4t-medium", "pixtral-12b", "rwkv6-7b"]
+
+
+def cell(arch, shape, mesh):
+    fn = os.path.join(DRY, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        return json.load(f)
+
+
+def fmt(c):
+    if c is None:
+        return "—"
+    if c["status"] == "skipped":
+        return "skip"
+    if c["status"] != "ok":
+        return "ERR"
+    r = c["roofline"]
+    return (f"{r['compute_s']:.2f}/{r['memory_s']:.2f}/{r['collective_s']:.2f}s "
+            f"**{r['bottleneck'][:4]}** f={r['roofline_fraction']:.3f}")
+
+
+def dryrun_table(mesh):
+    print(f"\n### {'Single-pod 16x16 (256 chips)' if mesh=='single' else 'Multi-pod 2x16x16 (512 chips)'}\n")
+    print("| arch | shape | status | peak GB/dev | fits 16GB | micro | lower+compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in ORDER:
+            c = cell(a, s, mesh)
+            if c is None:
+                continue
+            if c["status"] == "skipped":
+                print(f"| {a} | {s} | skipped (full attention @500k) | — | — | — | — |")
+                continue
+            if c["status"] != "ok":
+                print(f"| {a} | {s} | **ERROR** | — | — | — | — |")
+                continue
+            mb = c.get("meta", {}).get("microbatches", "—")
+            print(f"| {a} | {s} | ok | {c['peak_bytes_per_device']/1e9:.2f} | "
+                  f"{'yes' if c['fits_hbm'] else 'no'} | {mb} | "
+                  f"{c['lower_s']+c['compile_s']:.0f} |")
+
+
+def roofline_table(mesh):
+    print(f"\n### Roofline terms — {mesh} pod mesh\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck | "
+          "MODEL_FLOPs | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in ORDER:
+            c = cell(a, s, mesh)
+            if c is None or c["status"] != "ok":
+                continue
+            r = c["roofline"]
+            print(f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                  f"{r['collective_s']:.3f} | {r['bottleneck']} | "
+                  f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.3f} | "
+                  f"{r['roofline_fraction']:.4f} |")
+
+
+def coll_detail(mesh):
+    print(f"\n### Collective mix — {mesh} (bytes/device/step)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter | all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in ORDER:
+            c = cell(a, s, mesh)
+            if c is None or c["status"] != "ok":
+                continue
+            b = c["collectives"]["bytes"]
+            f = lambda k: f"{b.get(k,0)/1e9:.2f}G"
+            print(f"| {a} | {s} | {f('all-gather')} | {f('all-reduce')} | "
+                  f"{f('reduce-scatter')} | {f('all-to-all')} | "
+                  f"{f('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        dryrun_table("single")
+        dryrun_table("multi")
+    if which in ("all", "roofline"):
+        roofline_table("single")
+    if which in ("all", "coll"):
+        coll_detail("single")

@@ -1,0 +1,14 @@
+"""REAP-JX: Record-and-Prefetch snapshot substrate for serverless ML
+functions on TPU pods (ASPLOS'21 REAP/vHive, rebuilt in JAX).
+
+Subpackages:
+  core         the paper's contribution (arena, record, WS file, prefetch)
+  serving      orchestrator + instance lifecycle (vHive-CRI analogue)
+  models/nn    the 10 assigned architectures as functional JAX
+  kernels      Pallas TPU kernels with jnp oracles
+  distributed  sharding rules, HLO roofline analyzer, grad compression
+  training     optimizer, fault-tolerant loop, snapshot checkpoints
+  data         memmap token pipeline
+  configs      architecture registry (--arch <id>)
+  launch       mesh / dryrun / train / serve entrypoints
+"""

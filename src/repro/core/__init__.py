@@ -1,0 +1,11 @@
+"""The paper's primary contribution: snapshot arena + REAP record/prefetch.
+
+  arena.py    -- guest-memory-file format + demand-paged InstanceArena
+  snapshot.py -- booted-instance image builder (infra/serve/boot regions)
+  reap.py     -- trace + WS files, record & prefetch phases, re-record policy
+  executor.py -- model-aware fault-scheduling invocation executor
+"""
+from .arena import PAGE, ArenaLayout, GuestMemoryFile, InstanceArena, PageSource
+from .executor import run_invocation
+from .reap import ColdStartReport, Monitor, ReapConfig, has_record, prefetch, write_record
+from .snapshot import booted_footprint_bytes, build_instance_snapshot

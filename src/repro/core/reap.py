@@ -1,0 +1,167 @@
+"""REAP: Record-and-Prefetch (the paper's §5).
+
+* **Record phase**: the first cold invocation runs against a demand-paged
+  :class:`InstanceArena`; the monitor records the ordered page-fault trace.
+  Afterwards the recorded pages are copied into a *contiguous, compact
+  working-set (WS) file* and the page indices into a *trace file*.
+
+* **Prefetch phase**: every later cold invocation fetches the whole WS file
+  with a single large read (``O_DIRECT``, bypassing the page cache --
+  §5.2.3) and eagerly installs the pages into the instance arena before the
+  function runs.  Residual faults (mispredicted pages, §7.1) are served on
+  demand by the monitor.
+
+* **Re-record policy** (§7.2): if the residual fault count exceeds
+  ``rerecord_threshold`` x |WS|, the orchestrator re-records on the next
+  invocation.
+
+Files for function ``f`` under ``store_dir``:
+  ``f.mem`` + ``f.manifest.json``   guest memory file (arena.py)
+  ``f.ws``                          working-set file (contiguous pages)
+  ``f.trace.npy``                   int64 page indices (original offsets)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from .arena import PAGE, GuestMemoryFile, InstanceArena, PageSource
+
+
+@dataclasses.dataclass
+class ReapConfig:
+    o_direct: bool = True            # bypass page cache for the WS read
+    parallel_faults: int = 0         # >1 => "Parallel PFs" design point
+    use_ws_file: bool = True         # False => prefetch via per-page reads
+    rerecord_threshold: float = 0.5  # residual faults / |WS| triggering re-record
+    min_ws_read: int = 8 << 20       # single-read floor noted in §5.2.3 (bytes)
+
+
+@dataclasses.dataclass
+class ColdStartReport:
+    load_vmm_s: float = 0.0          # manifest + arena + exec-handle restore
+    connection_s: float = 0.0        # dispatcher (re-)binding
+    prefetch_s: float = 0.0          # WS fetch + eager install (REAP only)
+    processing_s: float = 0.0        # function execution (incl. demand faults)
+    fault_s: float = 0.0             # portion of processing spent in faults
+    n_faults: int = 0
+    n_prefetched_pages: int = 0
+    ws_bytes: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return (self.load_vmm_s + self.connection_s + self.prefetch_s
+                + self.processing_s)
+
+
+def trace_path(base: str) -> str:
+    return base + ".trace.npy"
+
+
+def ws_path(base: str) -> str:
+    return base + ".ws"
+
+
+def has_record(base: str) -> bool:
+    return os.path.exists(trace_path(base)) and os.path.exists(ws_path(base))
+
+
+def write_record(base: str, trace: list[int]) -> tuple[int, int]:
+    """Copy traced pages into the compact WS file + write the trace file.
+
+    Returns (n_pages, ws_bytes).  Duplicates are dropped, order preserved
+    (the order is the fault order -- §5.2.1).
+    """
+    seen: set[int] = set()
+    pages: list[int] = []
+    for p in trace:
+        if p not in seen:
+            seen.add(p)
+            pages.append(p)
+    arr = np.asarray(pages, dtype=np.int64)
+    src = PageSource(base + ".mem", o_direct=False)
+    try:
+        with open(ws_path(base) + ".tmp", "wb") as f:
+            for p in pages:
+                f.write(src.read_span(p * PAGE, PAGE))
+        os.replace(ws_path(base) + ".tmp", ws_path(base))
+        np.save(trace_path(base) + ".tmp.npy", arr)
+        os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
+    finally:
+        src.close()
+    return len(pages), len(pages) * PAGE
+
+
+def drop_record(base: str) -> None:
+    for p in (trace_path(base), ws_path(base)):
+        if os.path.exists(p):
+            os.remove(p)
+
+
+def prefetch(arena: InstanceArena, base: str, cfg: ReapConfig) -> tuple[int, float]:
+    """REAP prefetch phase: fetch WS with one read, eagerly install.
+
+    Returns (n_pages, seconds).
+    """
+    t0 = time.perf_counter()
+    pages = np.load(trace_path(base))
+    if cfg.use_ws_file:
+        src = PageSource(ws_path(base), o_direct=cfg.o_direct)
+        try:
+            data = src.read_span(0, len(pages) * PAGE)
+        finally:
+            src.close()
+        arena.install_span([int(p) for p in pages], data)
+    else:
+        # "Parallel PFs" design point: trace known, but pages still read from
+        # the (scattered) guest memory file
+        arena.touch_pages([int(p) for p in pages],
+                          parallel=max(cfg.parallel_faults, 1))
+    return len(pages), time.perf_counter() - t0
+
+
+class Monitor:
+    """Per-instance monitor thread analogue (§5.2): owns the arena, records
+    or prefetches, and serves residual faults.  In-process (goroutine ->
+    Python object whose fault service runs on the caller thread; I/O releases
+    the GIL so concurrent instances overlap, cf. Fig. 9)."""
+
+    def __init__(self, gm: GuestMemoryFile, base: str, cfg: ReapConfig):
+        self.gm = gm
+        self.base = base
+        self.cfg = cfg
+        self.arena = InstanceArena(gm, o_direct=cfg.o_direct)
+        self.mode = "prefetch" if has_record(base) else "record"
+        self.prefetched = 0
+        self.prefetch_s = 0.0
+
+    def start(self) -> None:
+        if self.mode == "prefetch":
+            self.prefetched, self.prefetch_s = prefetch(
+                self.arena, self.base, self.cfg)
+
+    def finish(self) -> dict:
+        """Called when the orchestrator receives the function response."""
+        stats = self.arena.stats
+        out = {
+            "mode": self.mode,
+            "n_faults": stats.n_faults,
+            "fault_s": stats.fault_seconds,
+            "prefetched_pages": self.prefetched,
+            "prefetch_s": self.prefetch_s,
+            "resident_bytes": self.arena.resident_bytes,
+        }
+        if self.mode == "record":
+            n, nbytes = write_record(self.base, stats.trace)
+            out["ws_pages"] = n
+            out["ws_bytes"] = nbytes
+        elif self.prefetched:
+            residual = stats.n_faults / max(self.prefetched, 1)
+            out["residual_ratio"] = residual
+            if residual > self.cfg.rerecord_threshold:
+                drop_record(self.base)  # §7.2 fallback: re-record next time
+                out["rerecord"] = True
+        return out

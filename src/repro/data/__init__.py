@@ -1,0 +1,1 @@
+from .pipeline import PrefetchLoader, TokenDataset, synthesize_corpus

@@ -1,0 +1,1 @@
+from . import compress, hlo_analysis, sharding

@@ -1,0 +1,304 @@
+"""Compiled-HLO analysis: loop-corrected FLOPs / bytes / collective traffic.
+
+``compiled.cost_analysis()`` on the CPU backend counts ``while`` bodies
+ONCE, so a scanned 80-layer model reports ~1/80th of its FLOPs and none of
+its per-layer collectives x trip count.  We therefore parse the optimized
+(post-SPMD) HLO text ourselves and walk the computation call graph:
+
+  * every ``while`` carries ``backend_config={"known_trip_count":{"n": K}}``
+    -- its body's costs are multiplied by K (nested loops multiply),
+  * ``dot`` FLOPs = 2 x |result| x prod(contracting dims)  (the MXU term),
+  * collective bytes = operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (async -start counted
+    once),
+  * HBM-byte proxy = bytes written by every buffer-producing op (dots,
+    fusions, reduces, copies, ...), x2 for the read side -- a documented
+    approximation (EXPERIMENTS.md §Roofline).
+
+All numbers are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition)=%([\w.\-]+)")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id"}
+
+
+def _shape_dims(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _type_bytes(text: str) -> int:
+    """Total bytes of all array types mentioned in `text` (handles tuples)."""
+    total = 0
+    for m in _TYPE_RE.finditer(text):
+        total += _shape_dims(m.group(2)) * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def analyze_hlo(text: str) -> dict:
+    """Loop-corrected per-device totals from optimized HLO text."""
+    # ---- pass 1: per-computation symbol dims ----
+    comp_syms: dict[str, dict[str, tuple[str, str]]] = {}
+    cur_name = None
+    for line in text.splitlines():
+        mh = _COMP_RE.match(line)
+        if mh and "=" not in line.split("(")[0]:
+            cur_name = mh.group(2)
+            comp_syms[cur_name] = {}
+            continue
+        if cur_name is None:
+            continue
+        md = _DEF_RE.match(line)
+        if md:
+            mt = _TYPE_RE.search(md.group(2))
+            if mt:
+                comp_syms[cur_name][md.group(1)] = (mt.group(1), mt.group(2))
+
+    # parameters: "%p = f32[..] parameter(0)" matched above; also tuple types
+    # are skipped by taking the first array type (sufficient for dot/coll).
+
+    # ---- pass 2: per-computation costs ----
+    comps: dict[str, dict] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        mh = _COMP_RE.match(line)
+        if mh and "=" not in line.split("(")[0]:
+            cur_name = mh.group(2)
+            cur = {"flops": 0.0, "write": 0.0,
+                   "coll": {c: [0.0, 0] for c in _COLLECTIVES},
+                   "whiles": [], "calls": []}
+            comps[cur_name] = cur
+            if mh.group(1):
+                entry = cur_name
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, rtype, op = md.group(1), md.group(2), md.group(3)
+        rbytes = _type_bytes(rtype)
+
+        if op == "while":
+            mt = _TRIP_RE.search(line)
+            mb = _BODY_RE.search(line)
+            if mb:
+                cur["whiles"].append((mb.group(1), int(mt.group(1)) if mt else 1))
+            continue
+
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            paren = line[line.index(op + "(") + len(op) + 1:]
+            paren = paren.split("), ")[0]
+            syms = comp_syms.get(cur_name, {})
+            ob = 0
+            for o in _OPERAND_RE.findall(paren):
+                if o in syms:
+                    dt, dims = syms[o]
+                    ob += _shape_dims(dims) * _DTYPE_BYTES[dt]
+            if ob == 0:
+                ob = _type_bytes(paren)
+            cur["coll"][base][0] += ob
+            cur["coll"][base][1] += 1
+            cur["write"] += rbytes
+            continue
+
+        for mc in _CALL_RE.finditer(line):
+            cur["calls"].append(mc.group(1))
+
+        if op in ("dynamic-update-slice", "scatter", "select-and-scatter"):
+            # HBM traffic is the updated slice, not the whole buffer: count
+            # the smallest operand (the update) instead of the result
+            paren = line[line.index(op + "(") + len(op) + 1:]
+            syms = comp_syms.get(cur_name, {})
+            sizes = []
+            for o in _OPERAND_RE.findall(paren.split(")")[0]):
+                if o in syms:
+                    dt, dims = syms[o]
+                    sizes.append(_shape_dims(dims) * _DTYPE_BYTES[dt])
+            upd = min(sizes) if sizes else rbytes
+            cur["write"] += min(upd * 2, rbytes)  # update write + read-mod
+            continue
+
+        if op == "dot":
+            mres = _TYPE_RE.search(rtype)
+            res_elems = _shape_dims(mres.group(2)) if mres else 0
+            mlhs = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            paren = line[line.index("dot(") + 4:]
+            opnames = _OPERAND_RE.findall(paren.split(")")[0])
+            contract = 1
+            syms = comp_syms.get(cur_name, {})
+            if mlhs and opnames and opnames[0] in syms:
+                dims = syms[opnames[0]][1]
+                dl = [int(d) for d in dims.split(",")] if dims else []
+                for ci in (mlhs.group(1).split(",") if mlhs.group(1) else []):
+                    idx = int(ci)
+                    if idx < len(dl):
+                        contract *= dl[idx]
+            cur["flops"] += 2.0 * res_elems * contract
+
+        if op not in _SKIP_OPS:
+            cur["write"] += rbytes
+
+    # ---- pass 3: weighted walk from entry ----
+    memo: dict[str, tuple] = {}
+
+    def walk(name: str) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, {k: [0.0, 0] for k in _COLLECTIVES})
+        memo[name] = (0.0, 0.0, {k: [0.0, 0] for k in _COLLECTIVES})  # cycle guard
+        fl, wr = c["flops"], c["write"]
+        coll = {k: list(v) for k, v in c["coll"].items()}
+        for callee in c["calls"]:
+            cf, cw, cc = walk(callee)
+            fl += cf
+            wr += cw
+            for k in coll:
+                coll[k][0] += cc[k][0]
+                coll[k][1] += cc[k][1]
+        for body, trip in c["whiles"]:
+            cf, cw, cc = walk(body)
+            fl += cf * trip
+            wr += cw * trip
+            for k in coll:
+                coll[k][0] += cc[k][0] * trip
+                coll[k][1] += cc[k][1] * trip
+        memo[name] = (fl, wr, coll)
+        return memo[name]
+
+    fl, wr, coll = walk(entry) if entry else (0.0, 0.0, {})
+    return {
+        "dot_flops_per_device": fl,
+        "hbm_bytes_per_device": 2.0 * wr,  # write + read proxy
+        "collective_bytes_per_device": {k: v[0] for k, v in coll.items()},
+        "collective_count": {k: v[1] for k, v in coll.items()},
+        "entry": entry,
+    }
+
+
+# --- TPU v5e hardware model (per brief) ------------------------------------
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled step.
+
+    flops / hbm_bytes / coll_bytes are PER-DEVICE (from analyze_hlo), so the
+    terms are per-chip seconds directly.
+    """
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    n_chips: int
+    model_flops: float = 0.0   # global (all chips)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        per_dev_model = self.model_flops / self.n_chips
+        return per_dev_model / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs utilization implied by the dominant term (an MFU
+        upper bound: ideal_time(model_flops) / roofline_step_time)."""
+        if not self.model_flops or not self.step_s:
+            return 0.0
+        ideal = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        return ideal / self.step_s
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "n_chips": self.n_chips, "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, n_params_total: int, n_params_active: int) -> float:
+    """6·N·D (train) / 2·N·D (inference) with MoE active-param counting."""
+    n = n_params_active or n_params_total
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+# Backwards-compatible simple interface used by tests
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    r = analyze_hlo(hlo_text)
+    return CollectiveStats(
+        {k: int(v) for k, v in r["collective_bytes_per_device"].items()},
+        dict(r["collective_count"]))

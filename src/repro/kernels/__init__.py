@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), <name>/ops.py (jit'd public wrapper), <name>/ref.py (pure-jnp
+oracle used by tests/test_kernels.py).
+"""
+from .decode_attention.ops import gqa_decode
+from .flash_attention.ops import mha
+from .mamba2_scan.ops import mamba2_ssd
+from .page_gather.ops import gather_pages, scatter_pages
+from .rwkv6_scan.ops import wkv6

@@ -1,0 +1,92 @@
+"""Single-token GQA decode attention over a long KV cache, Pallas TPU.
+
+One new query token attends over a KV cache of length S (up to 512k for the
+long-context cells).  Grid (B, KV, n_kv_blocks): per kv head, the G grouped
+query heads form the (G, D) q block (MXU-friendly), the online softmax state
+(m, l, acc) persists in VMEM scratch across the sequential KV-block steps.
+The valid cache length arrives as a scalar-prefetch operand so the DMA
+schedule is known up front; padded KV blocks are masked.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, bk: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bk)
+
+    limit = kv_len_ref[b]
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < limit, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v).astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, bk: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, D); k, v: (B, KV, S, D); kv_len: (B,) int32.
+
+    Returns (B, KV, G, D).
+    """
+    B, KV, G, D = q.shape
+    S = k.shape[2]
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, kv_len: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, kv_len: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, kv_len: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, kv_len: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

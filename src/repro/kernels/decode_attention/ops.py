@@ -1,0 +1,36 @@
+"""jit'd wrapper: standard cache layout in, lane padding, G >= 8 sublane
+grouping."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention as _kernel
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def gqa_decode(q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array,
+               *, bk: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (B, 1, H, D); k, v: (B, S, KV, D); kv_len: (B,).
+
+    Returns (B, 1, H, D): one decoded attention output per sequence.
+    """
+    B, _, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    pad = (-D) % LANE
+    qg = q[:, 0].reshape(B, KV, G, D)
+    kt = jnp.moveaxis(k, 1, 2)   # (B, KV, S, D)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad))) * ((D + pad) ** 0.5 / D ** 0.5)
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = _kernel(qg, kt, vt, kv_len, bk=bk, interpret=interpret)
+    if pad:
+        out = out[..., :D]
+    return out.reshape(B, 1, H, D)

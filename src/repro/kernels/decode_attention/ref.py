@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, KV, G, D); k, v: (B, KV, S, D); kv_len: (B,)."""
+    B, KV, G, D = q.shape
+    S = k.shape[2]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

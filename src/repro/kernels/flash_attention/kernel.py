@@ -1,0 +1,89 @@
+"""Causal flash attention (prefill hot-spot), Pallas TPU.
+
+Grid (B, H, n_q, n_kv) with the KV dimension innermost: the online-softmax
+running max / normalizer / accumulator live in VMEM scratch and persist
+across the sequential KV steps.  GQA is handled in the k/v index_map
+(kv head = h // group) -- no KV duplication in HBM.  Block sizes are
+MXU-aligned (multiples of 128 on the lane dim via ops.py padding).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, bq: int, bk: int, causal: bool):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    if causal:
+        i = pl.program_id(2)
+        q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v).astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D), H % KV == 0. Sq == Skv."""
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Sq // bq, Skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

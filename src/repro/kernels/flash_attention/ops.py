@@ -1,0 +1,33 @@
+"""jit'd wrapper: (B, S, H, D) layout in, head-dim padding to the MXU lane
+width, block-size selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _kernel
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret", "bq", "bk"))
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        bq: int = 128, bk: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D). Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    pad = (-D) % LANE
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        # padded D inflates the softmax scale; rescale q to compensate
+        qt = qt * ((D + pad) ** 0.5 / D ** 0.5)
+    out = _kernel(qt, kt, vt, causal=causal, bq=bq, bk=bk, interpret=interpret)
+    if pad:
+        out = out[..., :D]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: exact softmax attention with GQA."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D)."""
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, D) / math.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), Skv - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

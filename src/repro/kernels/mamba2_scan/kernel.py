@@ -1,0 +1,93 @@
+"""Chunked Mamba2 (SSD) scan, Pallas TPU.
+
+TPU adaptation of the CUDA selective-scan: the recurrence
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * x_t B_t^T,   y_t = C_t h_t + D x_t
+is evaluated chunk-wise -- intra-chunk contributions become (Lc x Lc) MXU
+matmuls; the (N x P) state is carried in VMEM scratch across the sequential
+chunk dimension of the grid (one flattened batch*head per outer grid step).
+
+Grid: (BH, n_chunks), chunk dim innermost.  D-residual is applied by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hT_ref,
+                h_ref, *, Lc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)      # (Lc, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (Lc, 1)
+    A = a_ref[0, 0]                       # scalar decay rate (negative)
+    B = b_ref[0].astype(jnp.float32)      # (Lc, N)
+    C = c_ref[0].astype(jnp.float32)      # (Lc, N)
+    h = h_ref[...]                        # (N, P)
+
+    la = dt * A                                        # (Lc, 1) log-decay
+    cum = jnp.cumsum(la, axis=0)                       # inclusive
+    # intra-chunk: M[t, s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s <= t
+    diff = cum - cum.T                                 # (Lc, Lc) via broadcast
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (Lc, Lc)
+    M = cb * decay * dt.T
+    y = jax.lax.dot(M, x)                              # (Lc, P)
+    # inter-chunk: y_t += exp(cum_t) * C_t @ h
+    y = y + jnp.exp(cum) * jax.lax.dot(C, h)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: h' = exp(cum_L) h + sum_s exp(cum_L - cum_s) dt_s B_s^T x_s
+    w = jnp.exp(cum[-1:] - cum) * dt                   # (Lc, 1)
+    h_new = h * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        B * w, x, (((0,), (0,)), ((), ())))            # (N, P)
+    h_ref[...] = h_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        hT_ref[0] = h_new.astype(hT_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, h0: jax.Array, *, chunk: int = 128,
+             interpret: bool = True):
+    """x: (BH, L, P); dt: (BH, L); A: (BH,); B, C: (BH, L, N);
+    h0: (BH, N, P).  Returns (y: (BH, L, P), hT: (BH, N, P))."""
+    BH, L, P = x.shape
+    N = B.shape[-1]
+    Lc = min(chunk, L)
+    assert L % Lc == 0, (L, Lc)
+
+    kernel = functools.partial(_ssd_kernel, Lc=Lc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(BH, L // Lc),
+        in_specs=[
+            pl.BlockSpec((1, Lc, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Lc, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, Lc, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Lc, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, N, P), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lc, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, N, P), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt[..., None], A[:, None], B, C, h0)
+    return y, hT

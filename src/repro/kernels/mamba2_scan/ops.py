@@ -1,0 +1,30 @@
+"""jit'd wrapper: model layout in ((B, L, H, P) + per-head A), D-residual."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, D: jax.Array, h0: jax.Array, *,
+               chunk: int = 128, interpret: bool = True):
+    """x: (Bz, L, H, P); dt: (Bz, L, H); A, D: (H,); B, C: (Bz, L, N);
+    h0: (Bz, H, N, P).  Returns (y: (Bz, L, H, P), hT: (Bz, H, N, P))."""
+    Bz, L, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(Bz * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bz * H, L)
+    Af = jnp.tile(A, Bz)
+    Bf = jnp.repeat(B, H, axis=0).reshape(Bz, H, L, N).reshape(Bz * H, L, N) \
+        if False else jnp.broadcast_to(B[:, None], (Bz, H, L, N)).reshape(Bz * H, L, N)
+    Cf = jnp.broadcast_to(C[:, None], (Bz, H, L, N)).reshape(Bz * H, L, N)
+    h0f = h0.reshape(Bz * H, N, P)
+    y, hT = _kernel(xf, dtf, Af, Bf, Cf, h0f, chunk=chunk, interpret=interpret)
+    y = y.reshape(Bz, H, L, P).transpose(0, 2, 1, 3)
+    y = y + x * D[None, None, :, None]
+    return y, hT.reshape(Bz, H, N, P)

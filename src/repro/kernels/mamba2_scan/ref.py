@@ -1,0 +1,30 @@
+"""Recurrent (step-by-step) oracle for the SSD scan.
+
+Also the ground truth for the model-level chunked implementation in
+``repro.models.mamba2``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B, C, h0):
+    """x: (BH, L, P); dt: (BH, L); A: (BH,); B, C: (BH, L, N); h0: (BH, N, P)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp           # (BH,P), (BH,), (BH,N), (BH,N)
+        decay = jnp.exp(dtt * A)        # (BH,)
+        h = h * decay[:, None, None] + (dtt[:, None] * bt)[..., None] * xt[:, None, :]
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (xf.transpose(1, 0, 2), dtf.T, Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return y, hT

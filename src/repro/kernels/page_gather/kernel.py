@@ -1,0 +1,82 @@
+"""page_gather Pallas kernel: trace-driven gather of snapshot pages.
+
+The TPU-native analogue of REAP's WS-file packing (DESIGN.md §3): given a
+page table resident in HBM (e.g. a snapshot buffer, an expert bank) and a
+recorded trace of page indices, produce the *contiguous* working set in one
+pass.  The trace is a scalar-prefetch operand, so the index of every block
+is known to the DMA engine *before* the grid step runs -- the hardware
+realization of "prefetch pages in trace order".
+
+Block layout: each grid step copies one page (rows of ``page_elems``
+elements, padded to the 128-lane requirement by ops.py).  The same kernel
+runs in reverse as ``page_scatter`` (eager install of a prefetched WS into
+an arena buffer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    # table_ref block is selected by the index_map below; plain copy here.
+    out_ref[...] = table_ref[...]
+
+
+def page_gather(table: jax.Array, idx: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """out[i, :] = table[idx[i], :].
+
+    table: (n_pages, page_elems) -- any dtype; idx: (n,) int32.
+    """
+    n = idx.shape[0]
+    page_elems = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, page_elems), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page_elems), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, page_elems), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+def _scatter_kernel(idx_ref, ws_ref, dest_ref, out_ref):
+    del dest_ref  # aliased with out: unwritten pages keep arena contents
+    out_ref[...] = ws_ref[...]
+
+
+def page_scatter(ws: jax.Array, idx: jax.Array, dest: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """dest[idx[i], :] = ws[i, :] (in place via aliasing); other pages keep
+    their prior contents.
+
+    The eager-install half of the prefetch phase: the contiguous WS buffer
+    is written back into the instance's (scattered) guest page slots.
+    """
+    n, page_elems = ws.shape
+    n_pages = dest.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, page_elems), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, page_elems), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page_elems), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pages, page_elems), ws.dtype),
+        input_output_aliases={2: 0},  # dest (input, after the scalar op) -> out
+        interpret=interpret,
+    )(idx, ws, dest)

@@ -1,0 +1,43 @@
+"""jit'd public wrappers for page_gather/page_scatter.
+
+Handles lane padding (last dim to a multiple of 128) and dtype plumbing so
+callers can hand in raw page buffers of any width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import page_gather as _gather, page_scatter as _scatter
+
+LANE = 128
+
+
+def _pad_lanes(x: jax.Array):
+    pad = (-x.shape[1]) % LANE
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x, pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_pages(table: jax.Array, idx: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Contiguous working set from a page table + trace (REAP record order)."""
+    orig = table.shape[1]
+    table, _ = _pad_lanes(table)
+    out = _gather(table, idx.astype(jnp.int32), interpret=interpret)
+    return out[:, :orig]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(2,))
+def scatter_pages(ws: jax.Array, idx: jax.Array, dest: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """Eager install: scatter the contiguous WS into the arena buffer."""
+    orig = ws.shape[1]
+    ws, _ = _pad_lanes(ws)
+    dest_p, pad = _pad_lanes(dest)
+    out = _scatter(ws, idx.astype(jnp.int32), dest_p, interpret=interpret)
+    return out[:, :orig]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for page_gather/page_scatter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def page_gather_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(table, idx, axis=0)
+
+
+def page_scatter_ref(ws: jax.Array, idx: jax.Array, n_pages: int) -> jax.Array:
+    out = jnp.zeros((n_pages, ws.shape[1]), ws.dtype)
+    return out.at[idx].set(ws)

@@ -1,0 +1,102 @@
+"""Chunked WKV6 recurrence (RWKV6 "Finch"), Pallas TPU.
+
+Recurrence per head with *per-channel* data-dependent decay w_t (i = key
+channel, j = value channel):
+
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] v_t[j]
+
+The CUDA wkv6 kernel is a per-timestep loop; the TPU-idiomatic form is the
+chunked matrix evaluation: all pairwise intra-chunk decays are differences
+of the cumulative log-decay (exponents <= 0, numerically safe), contracted
+on the MXU; the (D x D) state persists in VMEM scratch across the
+sequential chunk grid dimension.
+
+Grid: (B*H, n_chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_ref, *, Lc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)   # (Lc, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)   # log-decay, < 0
+    u = u_ref[0].astype(jnp.float32)   # (1, D) bonus
+    S = s_ref[...]                     # (D, D) key-major
+
+    cum = jnp.cumsum(w, axis=0)        # inclusive d_t
+    d_prev = cum - w                   # exclusive d_{t-1}
+    # inter-chunk
+    y = jax.lax.dot(r * jnp.exp(d_prev), S)            # (Lc, D)
+    # intra-chunk, strictly causal: A[t,s] = sum_i r_t exp(d_prev_t - cum_s) k_s
+    diff = d_prev[:, None, :] - cum[None, :, :]        # (Lc, Lc, D)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0)
+            > jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1))
+    dec = jnp.where(mask[..., None], jnp.exp(diff), 0.0)
+    A = jnp.einsum("ti,tsi,si->ts", r, dec, k,
+                   preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot(A, v)
+    # current-token bonus
+    y = y + jnp.sum(r * u * k, axis=1, keepdims=True) * v
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state: S' = Diag(exp(cum_L)) S + (k * exp(cum_L - cum))^T v
+    last = cum[-1:]
+    kdec = k * jnp.exp(last - cum)
+    s_new = S * jnp.exp(last.T) + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())))
+    s_ref[...] = s_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        sT_ref[0] = s_new.astype(sT_ref.dtype)
+
+
+def wkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+              u: jax.Array, s0: jax.Array, *, chunk: int = 32,
+              interpret: bool = True):
+    """r, k, v, logw: (BH, L, D); u: (BH, D); s0: (BH, D, D).
+
+    Returns (y: (BH, L, D), sT: (BH, D, D))."""
+    BH, L, D = r.shape
+    Lc = min(chunk, L)
+    assert L % Lc == 0, (L, Lc)
+
+    kernel = functools.partial(_wkv6_kernel, Lc=Lc)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(BH, L // Lc),
+        in_specs=[
+            pl.BlockSpec((1, Lc, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Lc, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Lc, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Lc, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, D), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, D, D), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lc, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, D, D), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, D), r.dtype),
+            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u[:, None, :], s0)
+    return y, sT

@@ -1,0 +1,26 @@
+"""jit'd wrapper: model layout in ((B, L, H, D) + per-head u)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_scan as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, s0: jax.Array, *, chunk: int = 32,
+         interpret: bool = True):
+    """r, k, v, logw: (B, L, H, D); u: (H, D); s0: (B, H, D, D).
+
+    Returns (y: (B, L, H, D), sT: (B, H, D, D))."""
+    B, L, H, D = r.shape
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, L, D)
+    uf = jnp.tile(u, (B, 1))
+    y, sT = _kernel(flat(r), flat(k), flat(v), flat(logw), uf,
+                    s0.reshape(B * H, D, D), chunk=chunk, interpret=interpret)
+    return (y.reshape(B, H, L, D).transpose(0, 2, 1, 3),
+            sT.reshape(B, H, D, D))

@@ -1,0 +1,25 @@
+"""Recurrent oracle for WKV6 (also ground truth for models.rwkv6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan_ref(r, k, v, logw, u, s0):
+    """r, k, v, logw: (BH, L, D); u: (BH, D); s0: (BH, D, D)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp            # (BH, D) each
+        kv = kt[..., None] * vt[:, None, :]              # (BH, D, D)
+        y = jnp.einsum("bi,bij->bj", rt, S + uf[..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    sT, ys = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (rf.transpose(1, 0, 2), kf.transpose(1, 0, 2),
+         vf.transpose(1, 0, 2), wf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(r.dtype), sT

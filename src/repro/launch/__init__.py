@@ -1,0 +1,3 @@
+# NOTE: do not import .dryrun here -- it sets XLA_FLAGS at import time and
+# must only be imported as the entrypoint (python -m repro.launch.dryrun).
+from . import mesh, steps

@@ -1,0 +1,249 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the host-device override before any other import (jax locks the
+device count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, shape_applicable
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed import sharding as shd
+from ..distributed.hlo_analysis import Roofline, analyze_hlo, model_flops
+from ..models import get_family
+from ..nn import spec as nnspec
+from ..training import optimizer as opt_lib
+from . import steps as steps_lib
+from .mesh import make_production_mesh
+
+
+def active_params(cfg: ModelConfig, specs) -> tuple[int, int]:
+    """(total, active) param counts; MoE active = shared + top_k/E routed."""
+    total = expert = 0
+    for path, s in nnspec.tree_paths(specs):
+        total += s.size
+        if "/moe/wi" in path or "/moe/wo" in path:
+            expert += s.size
+    if cfg.n_experts and expert:
+        active = total - expert + expert * cfg.top_k / cfg.n_experts
+    else:
+        active = total
+    return total, int(active)
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Activation-memory heuristic: keep per-device microbatch tokens
+    around <= 64k for wide models."""
+    per_dev_batch = max(shape.global_batch // shd.data_size(mesh), 1)
+    tokens = per_dev_batch * shape.seq_len
+    if cfg.d_model >= 8192:
+        target = 4096      # ~80-layer models: keep saved carries ~5GB
+    elif cfg.d_model >= 4096:
+        target = 8192
+    else:
+        target = 16384
+    micro = max(1, tokens // target)
+    micro = min(micro, per_dev_batch)
+    while per_dev_batch % micro and micro > 1:
+        micro -= 1
+    return micro
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               microbatches: int | None = None, fsdp: bool = True,
+               remat: bool = True, grad_dtype="float32",
+               donate: bool = True, remat_policy: str | None = None):
+    """Build + lower the right step for one cell. Returns (lowered, meta)."""
+    fam = get_family(cfg)
+    policy = (getattr(jax.checkpoint_policies, remat_policy)
+              if remat_policy else None)
+    shd.set_activation_rules(mesh, shape.global_batch)
+    rules = shd.make_rules(mesh, batch=shape.global_batch, fsdp=fsdp)
+    pspecs = fam.param_specs(cfg)
+    params_abs = nnspec.abstract(pspecs)
+    params_sh = nnspec.shardings(pspecs, mesh, rules)
+    bspec = shd.batch_pspec(mesh, shape.global_batch)
+    in_specs = steps_lib.input_specs(cfg, shape)
+    batch_sh = {k: NamedSharding(mesh, P(bspec[0], *([None] * (len(v.shape) - 1))))
+                for k, v in in_specs.items()}
+
+    if shape.kind == "train":
+        opt = opt_lib.OptConfig()
+        ospecs = opt_lib.state_specs(pspecs, opt)
+        opt_abs = nnspec.abstract(ospecs)
+        opt_sh = nnspec.shardings(ospecs, mesh, rules)
+        micro = microbatches or pick_microbatches(cfg, shape, mesh)
+        step = steps_lib.build_train_step(
+            cfg, opt, remat=remat, microbatches=micro,
+            grad_dtype=jnp.dtype(grad_dtype),
+            grad_shardings=params_sh, remat_policy=policy)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, batch_sh),
+                         out_shardings=(params_sh, opt_sh, None),
+                         donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(params_abs, opt_abs, in_specs)
+        return lowered, {"microbatches": micro}
+
+    if shape.kind == "prefill":
+        cspecs = fam.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        cache_abs = nnspec.abstract(cspecs)
+        cache_sh = nnspec.shardings(cspecs, mesh, rules)
+        step = steps_lib.build_prefill_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,) if donate else ())
+        lowered = jitted.lower(params_abs, in_specs, cache_abs)
+        return lowered, {}
+
+    # decode: one new token against a seq_len cache
+    cspecs = fam.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    cache_abs = nnspec.abstract(cspecs)
+    cache_sh = nnspec.shardings(cspecs, mesh, rules)
+    step = steps_lib.build_decode_step(cfg)
+    tok_abs = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+    tok_sh = {"tokens": NamedSharding(mesh, P(bspec[0], None))}
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(step,
+                     in_shardings=(params_sh, cache_sh, tok_sh,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,) if donate else ())
+    lowered = jitted.lower(params_abs, cache_abs, tok_abs, pos_abs)
+    return lowered, {}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             cfg_overrides: dict | None = None, tag: str = "",
+             **overrides) -> dict:
+    import dataclasses as _dc
+    cfg = ARCHS[arch]
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "tag": tag, "cfg_overrides": cfg_overrides or {},
+              "overrides": {k: str(v) for k, v in overrides.items()}}
+    if not ok:
+        result.update(status="skipped", reason=why)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            suffix = f"__{tag}" if tag else ""
+            with open(os.path.join(out_dir,
+                      f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"),
+                      "w") as f:
+                json.dump(result, f, indent=1)
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    t0 = time.perf_counter()
+    try:
+        try:
+            lowered, meta = lower_cell(cfg, shape, mesh, **overrides)
+        finally:
+            shd.set_activation_rules(None)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        analysis = analyze_hlo(compiled.as_text())
+        specs = get_family(cfg).param_specs(cfg)
+        total_p, active_p = active_params(cfg, specs)
+        mf = model_flops(cfg, shape, total_p, active_p)
+        roof = Roofline(
+            flops=analysis["dot_flops_per_device"],
+            hbm_bytes=analysis["hbm_bytes_per_device"],
+            coll_bytes=float(sum(analysis["collective_bytes_per_device"].values())),
+            n_chips=n_chips,
+            model_flops=mf,
+        )
+        per_dev = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        }
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        result.update(
+            status="ok", meta=meta,
+            n_chips=n_chips,
+            params_total=total_p, params_active=active_p,
+            memory_per_device=per_dev,
+            peak_bytes_per_device=peak,
+            fits_hbm=bool(peak < 16e9),
+            collectives={"bytes": analysis["collective_bytes_per_device"],
+                         "count": analysis["collective_count"]},
+            cost_analysis_raw={k: float(v) for k, v in cost.items()
+                               if k in ("flops", "bytes accessed")},
+            roofline=roof.to_dict(),
+            lower_s=t_lower, compile_s=t_compile,
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                fn = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    with open(fn) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached ] {arch} x {shape} x {mk}: {prev['status']}")
+                        continue
+                r = run_cell(arch, shape, mk, args.out)
+                if r["status"] == "ok":
+                    roof = r["roofline"]
+                    print(f"[ok     ] {arch} x {shape} x {mk}: "
+                          f"peak/dev={r['peak_bytes_per_device']/1e9:.2f}GB "
+                          f"bottleneck={roof['bottleneck']} "
+                          f"step={roof['step_s']*1e3:.1f}ms "
+                          f"(lower {r['lower_s']:.0f}s compile {r['compile_s']:.0f}s)")
+                elif r["status"] == "skipped":
+                    print(f"[skipped] {arch} x {shape} x {mk}: {r['reason']}")
+                else:
+                    failures += 1
+                    print(f"[ERROR  ] {arch} x {shape} x {mk}: {r['error']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

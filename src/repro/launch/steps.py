@@ -1,0 +1,169 @@
+"""Step functions + input specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) -- the multi-pod dry-run lowers against these.
+``make_batch`` materializes small real inputs for smoke tests / examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import get_family
+from ..nn import spec as nnspec
+from ..training import optimizer as opt_lib
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ModelConfig, seq: int, batch: int,
+                 kind: str) -> dict[str, tuple[tuple[int, ...], Any]]:
+    """(shape, dtype) per input tensor for one step of ``kind``."""
+    if kind == "decode":
+        d: dict[str, tuple[tuple[int, ...], Any]] = {
+            "tokens": ((batch, 1), jnp.int32)}
+        return d
+    d = {}
+    if cfg.family == "vlm":
+        n_txt = max(seq - cfg.n_patches, 1)
+        d["tokens"] = ((batch, n_txt), jnp.int32)
+        d["patch_embeds"] = ((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    elif cfg.family == "encdec":
+        d["tokens"] = ((batch, seq), jnp.int32)
+        d["frames"] = ((batch, max(seq // cfg.frame_stride, 1), cfg.d_model),
+                       jnp.bfloat16)
+    else:
+        d["tokens"] = ((batch, seq), jnp.int32)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    shapes = batch_shapes(cfg, shape.seq_len, shape.global_batch, shape.kind)
+    return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+
+
+def make_batch(cfg: ModelConfig, seq: int, batch: int, kind: str,
+               key: jax.Array) -> dict[str, jax.Array]:
+    out = {}
+    for name, (shape, dtype) in batch_shapes(cfg, seq, batch, kind).items():
+        key, sub = jax.random.split(key)
+        if dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, shape, 0, cfg.vocab, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(sub, shape, jnp.float32) * 0.02
+                         ).astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, opt: opt_lib.OptConfig, *,
+                     remat: bool = True, remat_policy=None,
+                     grad_dtype=jnp.float32, microbatches: int = 1,
+                     grad_shardings=None, accum_dtype=jnp.float32):
+    """Train step with optional gradient accumulation.
+
+    ``microbatches > 1`` scans over batch slices accumulating grads --
+    the standard activation-memory lever that lets the 100B-class cells
+    fit per-chip HBM at global_batch 256 x 4096.  ``grad_shardings``
+    (a params-shaped NamedSharding tree) pins the accumulator to the
+    parameter sharding -- without it XLA replicates the f32 accumulator
+    (embedding/lm-head grads alone are GBs per device at 150k vocab).
+    """
+    fam = get_family(cfg)
+
+    def loss_fn(p, b):
+        return fam.loss(cfg, p, b, remat=remat, remat_policy=remat_policy)
+
+    def constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain(grads)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def accum(carry, i):
+                loss_acc, grads_acc = carry
+                mb = jax.tree.map(lambda x: slice_mb(i, x), batch)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = constrain(jax.tree.map(
+                    lambda a, b_: a + b_.astype(accum_dtype), grads_acc, g))
+                return (loss_acc + l, grads_acc), None
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros),
+                jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.float32),
+                                 grads)
+        if grad_dtype != jnp.float32:
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        new_params, new_state, metrics = opt_lib.apply_updates(
+            params, grads, opt_state, opt)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def build_forward(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def fwd(params, batch):
+        return fam.forward(cfg, params, batch)
+
+    return fwd
+
+
+def build_prefill_step(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def prefill_step(params, batch, cache):
+        return fam.prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def decode_step(params, cache, batch, pos):
+        return fam.decode(cfg, params, cache, batch, pos)
+
+    return decode_step
+
+
+def param_specs(cfg: ModelConfig):
+    return get_family(cfg).param_specs(cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return get_family(cfg).cache_specs(cfg, batch, max_len)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return nnspec.initialize(param_specs(cfg), key)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, key: jax.Array | None = None):
+    return nnspec.initialize(cache_specs(cfg, batch, max_len),
+                             key if key is not None else jax.random.key(0))

@@ -1,0 +1,27 @@
+"""Model-family registry.
+
+Every family module exposes the same functional interface:
+  param_specs(cfg)                  -> spec tree
+  cache_specs(cfg, batch, max_len)  -> spec tree for decode state
+  forward(cfg, params, batch, *, remat=..., remat_policy=...) -> logits
+  prefill(cfg, params, batch, cache) -> (last_logits, cache)
+  decode(cfg, params, cache, batch, pos) -> (logits, cache)
+  loss(cfg, params, batch, ...)     -> scalar
+"""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from . import encdec, moe, rwkv6, transformer, zamba
+
+FAMILIES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "hybrid": zamba,
+    "rwkv": rwkv6,
+    "encdec": encdec,
+}
+
+
+def get_family(cfg: ModelConfig):
+    return FAMILIES[cfg.family]

@@ -1,0 +1,192 @@
+"""Encoder-decoder (seamless-m4t-medium backbone).
+
+The audio frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed frame embeddings (B, seq//frame_stride, d_model); the encoder is
+a bidirectional transformer over frames, the decoder a causal transformer
+with cross-attention.  Decode shapes run (the decoder has a KV cache);
+long_500k is skipped (full attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import act_batch
+from ..nn import layers as nn
+from .transformer import next_token_loss, stack_specs
+
+
+def enc_layer_spec(cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "attn": nn.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd),
+        "mlp": nn.mlp_spec(cfg.d_model, cfg.d_ff),
+        "ln1": nn.rmsnorm_spec(cfg.d_model),
+        "ln2": nn.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def dec_layer_spec(cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "self_attn": nn.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd),
+        "cross_q": nn.tensor(cfg.d_model, cfg.n_heads, hd,
+                             axes=("embed", "heads", "head_dim"), init="trunc_fan_in"),
+        "cross_k": nn.tensor(cfg.d_model, cfg.n_kv_heads, hd,
+                             axes=("embed", "kv_heads", "head_dim"), init="trunc_fan_in"),
+        "cross_v": nn.tensor(cfg.d_model, cfg.n_kv_heads, hd,
+                             axes=("embed", "kv_heads", "head_dim"), init="trunc_fan_in"),
+        "cross_o": nn.tensor(cfg.n_heads, hd, cfg.d_model,
+                             axes=("heads", "head_dim", "embed"), init="trunc_fan_in"),
+        "mlp": nn.mlp_spec(cfg.d_model, cfg.d_ff),
+        "ln1": nn.rmsnorm_spec(cfg.d_model),
+        "ln_x": nn.rmsnorm_spec(cfg.d_model),
+        "ln2": nn.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": nn.embedding_spec(cfg.vocab, cfg.d_model),
+        "enc_layers": stack_specs(enc_layer_spec(cfg), cfg.n_enc_layers or cfg.n_layers),
+        "dec_layers": stack_specs(dec_layer_spec(cfg), cfg.n_layers),
+        "ln_enc": nn.rmsnorm_spec(cfg.d_model),
+        "ln_f": nn.rmsnorm_spec(cfg.d_model),
+        "lm_head": nn.lm_head_spec(cfg.d_model, cfg.vocab),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    n_frames = max(1, max_len // cfg.frame_stride)
+    return {
+        "self_kv": stack_specs(
+            nn.attention_cache_spec(batch, max_len, cfg.n_kv_heads, hd, nn.kv_cache_dtype(cfg)),
+            cfg.n_layers),
+        "cross_kv": stack_specs(
+            nn.attention_cache_spec(batch, n_frames, cfg.n_kv_heads, hd, cfg.dtype),
+            cfg.n_layers),
+        # valid encoder length, replicated scalar per batch entry
+        "enc_len": nn.tensor(batch, axes=("batch",), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def encode(cfg, params, frames):
+    x = frames.astype(cfg.dtype)
+
+    def body(carry, lp):
+        h = nn.apply_rmsnorm(lp["ln1"], carry)
+        h, _ = nn.apply_attention(lp["attn"], h, rope_theta=cfg.rope_theta,
+                                  chunk=cfg.attn_chunk)
+        # bidirectional: rerun without causal mask via chunked_attention directly
+        return carry, None
+
+    # bidirectional attention needs causal=False; build explicitly
+    def enc_layer(carry, lp):
+        h = nn.apply_rmsnorm(lp["ln1"], carry)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        pos = jnp.arange(h.shape[1])
+        cos, sin = nn.rope_table(pos, q.shape[-1], cfg.rope_theta)
+        q = nn.apply_rope(q, cos, sin)
+        k = nn.apply_rope(k, cos, sin)
+        o = nn.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+        h = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x2 = carry + h
+        x2 = act_batch(x2 + nn.apply_mlp(lp["mlp"], nn.apply_rmsnorm(lp["ln2"], x2)))
+        return x2, None
+
+    x, _ = jax.lax.scan(enc_layer, x, params["enc_layers"])
+    return nn.apply_rmsnorm(params["ln_enc"], x)
+
+
+def _cross_attend(cfg, lp, x, enc_k, enc_v, enc_len=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["cross_q"])
+    o = nn.chunked_attention(q, enc_k, enc_v, causal=False, kv_len=enc_len,
+                             chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, lp["cross_o"])
+
+
+def _dec_layer(cfg, lp, x, enc_kv, self_cache=None, pos=None, enc_len=None):
+    h = nn.apply_rmsnorm(lp["ln1"], x)
+    h, new_kv = nn.apply_attention(lp["self_attn"], h, rope_theta=cfg.rope_theta,
+                                   cache=self_cache, cache_pos=pos,
+                                   chunk=cfg.attn_chunk)
+    x = x + h
+    h = nn.apply_rmsnorm(lp["ln_x"], x)
+    x = x + _cross_attend(cfg, lp, h, enc_kv[0], enc_kv[1], enc_len)
+    x = act_batch(x + nn.apply_mlp(lp["mlp"], nn.apply_rmsnorm(lp["ln2"], x)))
+    return x, new_kv
+
+
+def _dec_run(cfg, params, tokens, enc_out, cache=None, pos=None, enc_len=None):
+    x = nn.apply_embedding(params["embed"], tokens)
+
+    if cache is None:
+        def body(carry, lp):
+            enc_k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_k"])
+            enc_v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_v"])
+            y, _ = _dec_layer(cfg, lp, carry, (enc_k, enc_v))
+            return y, None
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        return x, None
+
+    def body(carry, xs):
+        lp, sc, cc = xs
+        y, new_kv = _dec_layer(cfg, lp, carry, (cc["k"], cc["v"]), sc, pos,
+                               enc_len)
+        return y, new_kv
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self_kv"], cache["cross_kv"]))
+    return x, new_self
+
+
+def forward(cfg, params, batch, *, remat=False, remat_policy=None):
+    del remat, remat_policy
+    enc_out = encode(cfg, params, batch["frames"])
+    x, _ = _dec_run(cfg, params, batch["tokens"], enc_out)
+    x = nn.apply_rmsnorm(params["ln_f"], x)
+    return nn.apply_lm_head(params["lm_head"], x)
+
+
+def prefill(cfg, params, batch, cache):
+    enc_out = encode(cfg, params, batch["frames"])
+    n_frames = enc_out.shape[1]
+
+    # materialize cross K/V into the cache once
+    def fill(lp, cc):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_k"]).astype(cc["k"].dtype)
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_v"]).astype(cc["v"].dtype)
+        ck = jax.lax.dynamic_update_slice_in_dim(cc["k"], k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cc["v"], v, 0, axis=1)
+        return {"k": ck, "v": cv}
+    cross = jax.vmap(lambda lp, cc: fill(lp, cc))(params["dec_layers"], cache["cross_kv"])
+    enc_len = jnp.full(batch["tokens"].shape[0], n_frames, jnp.int32)
+    cache = {"self_kv": cache["self_kv"], "cross_kv": cross, "enc_len": enc_len}
+    x, new_self = _dec_run(cfg, params, batch["tokens"], enc_out,
+                           cache={"self_kv": cache["self_kv"],
+                                  "cross_kv": cache["cross_kv"]},
+                           pos=0, enc_len=n_frames)
+    x = nn.apply_rmsnorm(params["ln_f"], x[:, -1:, :])
+    logits = nn.apply_lm_head(params["lm_head"], x)
+    return logits, {"self_kv": new_self, "cross_kv": cross, "enc_len": enc_len}
+
+
+def decode(cfg, params, cache, batch, pos):
+    x, new_self = _dec_run(cfg, params, batch["tokens"], None,
+                           cache={"self_kv": cache["self_kv"],
+                                  "cross_kv": cache["cross_kv"]},
+                           pos=pos, enc_len=cache["enc_len"][0])
+    xo = nn.apply_rmsnorm(params["ln_f"], x)
+    logits = nn.apply_lm_head(params["lm_head"], xo)
+    return logits, {"self_kv": new_self, "cross_kv": cache["cross_kv"],
+                    "enc_len": cache["enc_len"]}
+
+
+def loss(cfg, params, batch, *, remat=False, remat_policy=None):
+    from .transformer import ce_from_hidden
+    enc_out = encode(cfg, params, batch["frames"])
+    x, _ = _dec_run(cfg, params, batch["tokens"], enc_out)
+    return ce_from_hidden(cfg, params, x, batch["tokens"])

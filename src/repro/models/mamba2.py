@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) block: chunked parallel form for train/prefill, O(1)-state
+recurrent step for decode.
+
+TPU adaptation note (DESIGN.md §3): the CUDA Mamba2 kernel's warp-level
+selective scan is replaced by the *chunked matrix* (SSD) formulation --
+intra-chunk contributions become (Lc x Lc) MXU matmuls and inter-chunk state
+is carried through a ``lax.scan``, which is the TPU-idiomatic realization of
+the same recurrence.  Projections are split (z/x/B/C/dt as separate weights)
+so each is cleanly shardable; the depthwise conv is applied to x only
+(documented simplification vs. conv over [x,B,C]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..nn import layers as nn
+from ..nn.spec import tensor
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba2_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H, N = dims(cfg)
+    return {
+        "wz": tensor(d, d_inner, axes=("embed", "mlp"), init="trunc_fan_in"),
+        "wx": tensor(d, d_inner, axes=("embed", "mlp"), init="trunc_fan_in"),
+        "wB": tensor(d, N, axes=("embed", "state"), init="trunc_fan_in"),
+        "wC": tensor(d, N, axes=("embed", "state"), init="trunc_fan_in"),
+        "wdt": tensor(d, H, axes=("embed", "heads"), init="trunc_fan_in"),
+        "dt_bias": tensor(H, axes=("heads",), dtype=jnp.float32, init="zeros"),
+        "A_log": tensor(H, axes=("heads",), dtype=jnp.float32, init="zeros"),
+        "D": tensor(H, axes=("heads",), dtype=jnp.float32, init="ones"),
+        "conv_w": tensor(cfg.conv_kernel, d_inner, axes=(None, "mlp"),
+                         init="trunc_fan_in"),
+        "conv_b": tensor(d_inner, axes=("mlp",), dtype=jnp.float32, init="zeros"),
+        "norm": nn.rmsnorm_spec(d_inner),
+        "wo": tensor(d_inner, d, axes=("mlp", "embed"), init="trunc_fan_in"),
+    }
+
+
+def mamba2_state_spec(cfg: ModelConfig, batch: int) -> dict:
+    d_inner, H, N = dims(cfg)
+    return {
+        "ssm": tensor(batch, H, N, cfg.ssm_head_dim,
+                      axes=("batch", "heads", "state", None),
+                      dtype=jnp.float32, init="zeros"),
+        "conv": tensor(batch, cfg.conv_kernel - 1, d_inner,
+                       axes=("batch", None, "mlp"), dtype=jnp.bfloat16,
+                       init="zeros"),
+    }
+
+
+def _proj(p, x):
+    z = jnp.einsum("bld,de->ble", x, p["wz"])
+    xi = jnp.einsum("bld,de->ble", x, p["wx"])
+    Bm = jnp.einsum("bld,dn->bln", x, p["wB"]).astype(jnp.float32)
+    Cm = jnp.einsum("bld,dn->bln", x, p["wC"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xi, Bm, Cm, dt
+
+
+def _conv(p, xi, conv_state=None):
+    """Depthwise causal conv along L. conv_state: (B, K-1, d_inner)."""
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xi.shape[0], K - 1, xi.shape[2]), xi.dtype)
+    else:
+        pad = conv_state.astype(xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)
+    out = sum(xp[:, i:i + xi.shape[1], :] * p["conv_w"][i] for i in range(K))
+    out = jax.nn.silu(out.astype(jnp.float32) + p["conv_b"]).astype(xi.dtype)
+    new_state = xp[:, -(K - 1):, :]
+    return out, new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, D, h0, chunk: int = 128):
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P) inputs per head; dt: (B, L, H); A: (H,) (negative);
+    Bm, Cm: (B, L, N); h0: (B, H, N, P) initial state.
+    Returns y: (B, L, H, P), hT.
+    """
+    Bsz, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        # zero x/B and zero dt on padded steps leave the state untouched
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    xc = xh.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+    la = dtc * A  # log decay per step (<= 0): (B, nc, Lc, H)
+    cum = jnp.cumsum(la, axis=2)  # inclusive
+
+    def step(h, inp):
+        xk, dtk, bk, ck, lak, cumk = inp  # chunk-major leading B
+        # intra-chunk: M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s <= t
+        diff = cumk[:, :, None, :] - cumk[:, None, :, :]  # (B, Lc, Lc, H)
+        Lc = xk.shape[1]
+        mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", ck, bk)
+        M = cb[..., None] * decay * dtk[:, None, :, :]
+        y = jnp.einsum("btsh,bshp->bthp", M, xk)
+        # inter-chunk: y_t += exp(cum_t) * C_t @ h
+        y = y + jnp.einsum("btn,bhnp,bth->bthp", ck, h,
+                           jnp.exp(cumk))
+        # state update
+        last = cumk[:, -1:, :]  # (B,1,H)
+        w = jnp.exp(last - cumk) * dtk  # (B, Lc, H)
+        h_new = h * jnp.exp(last[:, 0, :])[:, :, None, None] + jnp.einsum(
+            "bsn,bshp,bsh->bhnp", bk, xk, w)
+        return h_new, y
+
+    inputs = tuple(a.transpose(1, 0, *range(2, a.ndim)) for a in
+                   (xc, dtc, Bc, Cc, la, cum))
+    hT, yc = jax.lax.scan(step, h0.astype(jnp.float32), inputs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, Lp, H, P)[:, :L]
+    y = y + xh[:, :L].astype(jnp.float32) * D[None, None, :, None]
+    return y, hT
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None):
+    """x: (B, L, d). Returns (y, new_state|None)."""
+    Bsz, L, d = x.shape
+    d_inner, H, N = dims(cfg)
+    P = cfg.ssm_head_dim
+    z, xi, Bm, Cm, dt = _proj(p, x)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _conv(p, xi, conv_state)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(Bsz, L, H, P)
+    h0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if state is None
+          else state["ssm"])
+    y, hT = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], h0,
+                        chunk=min(128, max(8, L)))
+    y = y.reshape(Bsz, L, d_inner).astype(x.dtype)
+    y = nn.apply_rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = jnp.einsum("ble,ed->bld", y, p["wo"])
+    new_state = None if state is None else {"ssm": hT, "conv": new_conv}
+    return out, new_state
+
+
+def mamba2_step(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    """Single-token decode step. x: (B, 1, d)."""
+    return apply_mamba2(p, x, cfg, state)

@@ -1,0 +1,282 @@
+"""Mixture-of-Experts decoders.
+
+Covers both assigned MoE shapes:
+  * deepseek-moe-16b  -- fine-grained: 1 leading dense layer, then every layer
+    MoE with 64 routed experts (top-6) + 2 shared experts.
+  * llama4-maverick   -- coarse: MoE every 2nd layer, 128 routed experts
+    (top-1) + 1 shared expert.
+
+Dispatch is capacity-based scatter/gather (GShard-style but without the
+(B,S,E,C) one-hot combine tensor): tokens are flattened, ranked into their
+expert's capacity slots via a cumulative-sum over the top-k assignment
+matrix, scattered into an (E, C, d) buffer, run through a batched expert
+FFN, and gathered back with router weights.  Under pjit the expert axis is
+sharded on the "model" mesh axis (expert parallelism) and XLA inserts the
+dispatch/combine all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import act_batch, act_expert
+from ..nn import layers as nn
+from .transformer import (_logits, _trunk_in, next_token_loss, stack_specs)
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def moe_mlp_spec(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert or cfg.d_ff
+    s = {
+        "router": nn.tensor(d, e, axes=("embed", "expert"), dtype=jnp.float32,
+                            init="trunc_fan_in"),
+        "wi_gate": nn.tensor(e, d, f, axes=("expert", "embed", None),
+                             init="trunc_fan_in"),
+        "wi_up": nn.tensor(e, d, f, axes=("expert", "embed", None),
+                           init="trunc_fan_in"),
+        "wo": nn.tensor(e, f, d, axes=("expert", None, "embed"),
+                        init="trunc_fan_in"),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = nn.mlp_spec(d, cfg.n_shared_experts * (cfg.d_ff_expert or cfg.d_ff))
+    return s
+
+
+def dense_layer_spec(cfg: ModelConfig, d_ff: int) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "attn": nn.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                                  cfg.qkv_bias),
+        "mlp": nn.mlp_spec(cfg.d_model, d_ff),
+        "ln1": nn.rmsnorm_spec(cfg.d_model),
+        "ln2": nn.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def moe_layer_spec(cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "attn": nn.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                                  cfg.qkv_bias),
+        "moe": moe_mlp_spec(cfg),
+        "ln1": nn.rmsnorm_spec(cfg.d_model),
+        "ln2": nn.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def _group_spec(cfg: ModelConfig) -> dict:
+    """One scanned group: (moe_every - 1) dense layers + 1 MoE layer."""
+    g = {"moe_layer": moe_layer_spec(cfg)}
+    if cfg.moe_every > 1:
+        g["dense_layers"] = stack_specs(
+            dense_layer_spec(cfg, cfg.d_ff_dense or cfg.d_ff), cfg.moe_every - 1)
+    return g
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    rest = cfg.n_layers - cfg.first_dense
+    assert rest % cfg.moe_every == 0, (cfg.n_layers, cfg.first_dense, cfg.moe_every)
+    return rest // cfg.moe_every
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": nn.embedding_spec(cfg.vocab, cfg.d_model),
+        "groups": stack_specs(_group_spec(cfg), n_groups(cfg)),
+        "ln_f": nn.rmsnorm_spec(cfg.d_model),
+        "lm_head": nn.lm_head_spec(cfg.d_model, cfg.vocab),
+    }
+    if cfg.first_dense:
+        s["first_dense"] = stack_specs(
+            dense_layer_spec(cfg, cfg.d_ff_dense or cfg.d_ff), cfg.first_dense)
+    return s
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    kv = lambda: nn.attention_cache_spec(batch, max_len, cfg.n_kv_heads, hd, nn.kv_cache_dtype(cfg))
+    s = {"group_moe": stack_specs(kv(), n_groups(cfg))}
+    if cfg.moe_every > 1:
+        s["group_dense"] = stack_specs(stack_specs(kv(), cfg.moe_every - 1), n_groups(cfg))
+    if cfg.first_dense:
+        s["first_dense"] = stack_specs(kv(), cfg.first_dense)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch / combine
+# ---------------------------------------------------------------------------
+
+
+def apply_moe_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(cfg.capacity_factor * k * T / E), 4)
+    flat_idx = idx.reshape(T * k)
+    assign = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)    # (T*k, E)
+    pos = (jnp.cumsum(assign, axis=0) - assign)              # rank within expert
+    pos = jnp.sum(pos * assign, axis=-1)                     # (T*k,)
+    keep = pos < capacity
+
+    token_of = jnp.repeat(jnp.arange(T), k)
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    buf = buf.at[flat_idx, safe_pos].add(
+        jnp.where(keep[:, None], xt[token_of], 0).astype(x.dtype))
+    buf = act_expert(buf)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = act_expert(jnp.einsum("ecf,efd->ecd", h, p["wo"]))  # (E, C, d)
+
+    gathered = out_buf[flat_idx, safe_pos]                   # (T*k, d)
+    w = (gate.reshape(T * k) * keep).astype(jnp.float32)
+    y = jnp.zeros((T, d), jnp.float32).at[token_of].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    y = y.astype(x.dtype).reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + nn.apply_mlp(p["shared"], x)
+    return y
+
+
+def routed_experts(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Return per-token routed expert ids (used by the REAP access tracer)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    return jax.lax.top_k(logits, cfg.top_k)[1]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _dense_fwd(cfg, lp, x, cache=None, pos=None):
+    h = nn.apply_rmsnorm(lp["ln1"], x)
+    h, nc = nn.apply_attention(lp["attn"], h, rope_theta=cfg.rope_theta,
+                               cache=cache, cache_pos=pos, chunk=cfg.attn_chunk)
+    x = x + h
+    x = act_batch(x + nn.apply_mlp(lp["mlp"], nn.apply_rmsnorm(lp["ln2"], x)))
+    return x, nc
+
+
+def _moe_fwd(cfg, lp, x, cache=None, pos=None):
+    h = nn.apply_rmsnorm(lp["ln1"], x)
+    h, nc = nn.apply_attention(lp["attn"], h, rope_theta=cfg.rope_theta,
+                               cache=cache, cache_pos=pos, chunk=cfg.attn_chunk)
+    x = x + h
+    x = act_batch(x + apply_moe_mlp(lp["moe"], nn.apply_rmsnorm(lp["ln2"], x), cfg))
+    return x, nc
+
+
+def _group_fwd(cfg, gp, x, gcache=None, pos=None):
+    new_dense_cache = None
+    if "dense_layers" in gp:
+        def body(carry, xs):
+            if gcache is None:
+                y, _ = _dense_fwd(cfg, xs, carry)
+                return y, None
+            lp, lc = xs
+            y, nc = _dense_fwd(cfg, lp, carry, lc, pos)
+            return y, nc
+        if gcache is None:
+            x, _ = jax.lax.scan(body, x, gp["dense_layers"])
+        else:
+            x, new_dense_cache = jax.lax.scan(
+                body, x, (gp["dense_layers"], gcache["dense"]))
+    x, new_moe_cache = _moe_fwd(
+        cfg, gp["moe_layer"], x,
+        None if gcache is None else gcache["moe"], pos)
+    return x, (new_dense_cache, new_moe_cache)
+
+
+def _run(cfg: ModelConfig, params: dict, x: jax.Array, cache: dict | None,
+         pos, remat: bool = False, remat_policy=None):
+    new_cache: dict = {}
+    if cfg.first_dense:
+        def fd_body(carry, xs):
+            if cache is None:
+                y, _ = _dense_fwd(cfg, xs, carry)
+                return y, None
+            lp, lc = xs
+            y, nc = _dense_fwd(cfg, lp, carry, lc, pos)
+            return y, nc
+        if cache is None:
+            x, _ = jax.lax.scan(fd_body, x, params["first_dense"])
+        else:
+            x, fd_cache = jax.lax.scan(
+                fd_body, x, (params["first_dense"], cache["first_dense"]))
+            new_cache["first_dense"] = fd_cache
+
+    def g_body(carry, xs):
+        if cache is None:
+            y, _ = _group_fwd(cfg, xs, carry)
+            return y, None
+        gp, gc = xs
+        y, (ndc, nmc) = _group_fwd(cfg, gp, carry, gc, pos)
+        out = {"moe": nmc} if ndc is None else {"moe": nmc, "dense": ndc}
+        return y, out
+
+    if cache is None:
+        body = jax.checkpoint(g_body, policy=remat_policy) if remat else g_body
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    else:
+        gxs = {"moe": cache["group_moe"]}
+        if "group_dense" in cache:
+            gxs["dense"] = cache["group_dense"]
+        def g_body2(carry, xs):
+            gp, gc = xs
+            y, (ndc, nmc) = _group_fwd(cfg, gp, carry, gc, pos)
+            out = {"moe": nmc}
+            if ndc is not None:
+                out["dense"] = ndc
+            return y, out
+        x, g_cache = jax.lax.scan(g_body2, x, (params["groups"], gxs))
+        new_cache["group_moe"] = g_cache["moe"]
+        if "dense" in g_cache:
+            new_cache["group_dense"] = g_cache["dense"]
+    return x, (new_cache if cache is not None else None)
+
+
+def _group_cache_view(cache):
+    return cache
+
+
+def forward(cfg, params, batch, *, remat=False, remat_policy=None):
+    x = _trunk_in(cfg, params, batch)
+    x, _ = _run(cfg, params, x, None, None, remat, remat_policy)
+    return _logits(cfg, params, x)
+
+
+def prefill(cfg, params, batch, cache):
+    x = _trunk_in(cfg, params, batch)
+    x, cache = _run(cfg, params, x, cache, 0)
+    return _logits(cfg, params, x[:, -1:, :]), cache
+
+
+def decode(cfg, params, cache, batch, pos):
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, cache = _run(cfg, params, x, cache, pos)
+    return _logits(cfg, params, x), cache
+
+
+def loss(cfg, params, batch, *, remat=False, remat_policy=None):
+    from .transformer import ce_from_hidden
+    x = _trunk_in(cfg, params, batch)
+    x, _ = _run(cfg, params, x, None, None, remat, remat_policy)
+    return ce_from_hidden(cfg, params, x, batch["tokens"])

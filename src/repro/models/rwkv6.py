@@ -1,0 +1,263 @@
+"""RWKV6 ("Finch"): attention-free, data-dependent per-channel decay.
+
+Train/prefill use a *chunked* WKV6 evaluation: within a chunk the pairwise
+per-channel decay matrix is built from cum-log-decay differences (all
+exponents <= 0, numerically safe) and contracted on the MXU; the chunk
+boundary state (H, D, D) is carried by ``lax.scan``.  This replaces the CUDA
+wkv6 kernel with a TPU-idiomatic matrix form (DESIGN.md §3).  Decode is the
+O(1) recurrence.
+
+Sub-quadratic: runs long_500k (state is (H, D, D) regardless of context).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import act_batch
+from ..nn import layers as nn
+from ..nn.spec import tensor
+from .transformer import _logits, next_token_loss, stack_specs
+
+
+def dims(cfg: ModelConfig):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    return H, cfg.rwkv_head_dim
+
+
+def time_mix_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, hd = dims(cfg)
+    r = cfg.decay_lora
+    return {
+        "mu_r": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "mu_k": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "mu_v": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "mu_w": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "mu_g": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "wr": tensor(d, H, hd, axes=("embed", "heads", "head_dim"), init="trunc_fan_in"),
+        "wk": tensor(d, H, hd, axes=("embed", "heads", "head_dim"), init="trunc_fan_in"),
+        "wv": tensor(d, H, hd, axes=("embed", "heads", "head_dim"), init="trunc_fan_in"),
+        "wg": tensor(d, H, hd, axes=("embed", "heads", "head_dim"), init="trunc_fan_in"),
+        "w0": tensor(H, hd, axes=("heads", "head_dim"), dtype=jnp.float32, init="zeros"),
+        "wA": tensor(d, r, axes=("embed", None), init="trunc_fan_in"),
+        "wB": tensor(r, H, hd, axes=(None, "heads", "head_dim"), init="trunc_fan_in"),
+        "u": tensor(H, hd, axes=("heads", "head_dim"), dtype=jnp.float32, init="zeros"),
+        "ln_x": nn.rmsnorm_spec(cfg.d_model),
+        "wo": tensor(H, hd, d, axes=("heads", "head_dim", "embed"), init="trunc_fan_in"),
+    }
+
+
+def channel_mix_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "mu_k": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "mu_r": tensor(d, axes=("embed",), dtype=jnp.float32, init="zeros"),
+        "wk": tensor(d, cfg.d_ff, axes=("embed", "mlp"), init="trunc_fan_in"),
+        "wv": tensor(cfg.d_ff, d, axes=("mlp", "embed"), init="trunc_fan_in"),
+        "wr": tensor(d, d, axes=("embed", None), init="trunc_fan_in"),
+    }
+
+
+def layer_spec(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": nn.rmsnorm_spec(cfg.d_model),
+        "ln2": nn.rmsnorm_spec(cfg.d_model),
+        "tm": time_mix_spec(cfg),
+        "cm": channel_mix_spec(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": nn.embedding_spec(cfg.vocab, cfg.d_model),
+        "ln_in": nn.rmsnorm_spec(cfg.d_model),
+        "layers": stack_specs(layer_spec(cfg), cfg.n_layers),
+        "ln_f": nn.rmsnorm_spec(cfg.d_model),
+        "lm_head": nn.lm_head_spec(cfg.d_model, cfg.vocab),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    H, hd = dims(cfg)
+    layer_state = {
+        "wkv": tensor(batch, H, hd, hd, axes=("batch", "heads", None, None),
+                      dtype=jnp.float32, init="zeros"),
+        "tm_shift": tensor(batch, cfg.d_model, axes=("batch", "embed"),
+                           dtype=jnp.bfloat16, init="zeros"),
+        "cm_shift": tensor(batch, cfg.d_model, axes=("batch", "embed"),
+                           dtype=jnp.bfloat16, init="zeros"),
+    }
+    return {"layers": stack_specs(layer_state, cfg.n_layers)}
+
+
+def _token_shift(x, prev):
+    """x: (B, L, d); prev: (B, d) last token of previous segment."""
+    shifted = jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1, :]],
+                              axis=1)
+    return shifted
+
+
+def _mix(x, shifted, mu):
+    return x + (shifted - x) * jax.nn.sigmoid(mu)
+
+
+def wkv6_chunked(r, k, v, logw, u, s0, chunk: int = 32):
+    """Chunked WKV6.
+
+    r, k, v: (B, L, H, D); logw: (B, L, H, D) (log decay, < 0);
+    u: (H, D) bonus; s0: (B, H, D, D) state (key-major: S[i, j], i key dim).
+    y_t = sum_{s<t} (r_t . exp(d_{t-1}-d_s) k_s) v_s + (r_t . u k_t) v_t + r_t^T Dec_t S
+    """
+    B, L, H, D = r.shape
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        # zero k/v and zero log-decay on padded steps leave state untouched
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    rc = r.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    wc = logw.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+
+    def step(s, inp):
+        rk, kk, vk, wk = inp  # (B, Lc, H, D)
+        cum = jnp.cumsum(wk, axis=1)            # inclusive d_t
+        d_prev = cum - wk                        # d_{t-1} (exclusive)
+        # inter-chunk: y_t += (r_t * exp(d_prev_t))^T S
+        rdec = rk * jnp.exp(d_prev)
+        y = jnp.einsum("blhi,bhij->blhj", rdec, s)
+        # intra-chunk, strictly causal: A[t,s] = sum_i r_t exp(d_{t-1}-d_s) k_s
+        diff = d_prev[:, :, None] - cum[:, None, :, :, :]   # (B, Lc, Lc, H, D)
+        Lc = rk.shape[1]
+        mask = jnp.tril(jnp.ones((Lc, Lc), bool), -1)
+        dec = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("bthi,btshi,bshi->btsh", rk, dec, kk)
+        y = y + jnp.einsum("btsh,bshj->bthj", A, vk)
+        # current token bonus
+        y = y + jnp.einsum("bthi,bthi,bthj->bthj", rk, u[None, None] * kk, vk)
+        # state update: S' = Diag(exp(cum_L)) S + sum_s exp(cum_L - cum_s) k_s v_s^T
+        last = cum[:, -1]                        # (B, H, D)
+        kdec = kk * jnp.exp(last[:, None] - cum)
+        s_new = s * jnp.exp(last)[..., None] + jnp.einsum(
+            "bshi,bshj->bhij", kdec, vk)
+        return s_new, y
+
+    inputs = tuple(a.transpose(1, 0, 2, 3, 4) for a in (rc, kc, vc, wc))
+    sT, yc = jax.lax.scan(step, s0.astype(jnp.float32), inputs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Lp, H, D)[:, :L]
+    return y, sT
+
+
+def apply_time_mix(p, x, cfg, state=None):
+    """x: (B, L, d). state: {"wkv": (B,H,D,D), "shift": (B,d)} or None."""
+    B, L, d = x.shape
+    H, hd = dims(cfg)
+    prev = (jnp.zeros((B, d), x.dtype) if state is None else state["shift"])
+    xs = _token_shift(x, prev)
+    xr = _mix(x, xs, p["mu_r"]).astype(x.dtype)
+    xk = _mix(x, xs, p["mu_k"]).astype(x.dtype)
+    xv = _mix(x, xs, p["mu_v"]).astype(x.dtype)
+    xw = _mix(x, xs, p["mu_w"]).astype(x.dtype)
+    xg = _mix(x, xs, p["mu_g"]).astype(x.dtype)
+
+    r = jnp.einsum("bld,dhk->blhk", xr, p["wr"])
+    k = jnp.einsum("bld,dhk->blhk", xk, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", xv, p["wv"])
+    g = jnp.einsum("bld,dhk->blhk", xg, p["wg"])
+    # data-dependent decay (the RWKV6 signature): w = exp(-exp(w0 + lora(xw)))
+    lora = jnp.einsum("bld,dr->blr", xw, p["wA"])
+    lora = jnp.einsum("blr,rhk->blhk", jnp.tanh(lora.astype(jnp.float32)).astype(x.dtype), p["wB"])
+    logw = -jnp.exp(p["w0"][None, None] + lora.astype(jnp.float32))
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state["wkv"])
+    y, sT = wkv6_chunked(r, k, v, logw, p["u"], s0,
+                         chunk=min(32, max(1, L)))
+    y = y.reshape(B, L, d).astype(x.dtype)
+    y = nn.apply_rmsnorm(p["ln_x"], y)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype).reshape(B, L, d)
+    out = jnp.einsum("blhk,hkd->bld", y.reshape(B, L, H, hd), p["wo"])
+    new_state = None if state is None else {"wkv": sT, "shift": x[:, -1, :].astype(jnp.bfloat16)}
+    return out, new_state
+
+
+def apply_channel_mix(p, x, state=None):
+    B, L, d = x.shape
+    prev = (jnp.zeros((B, d), x.dtype) if state is None else state.astype(x.dtype))
+    xs = _token_shift(x, prev)
+    xk = _mix(x, xs, p["mu_k"]).astype(x.dtype)
+    xr = _mix(x, xs, p["mu_r"]).astype(x.dtype)
+    kk = jnp.einsum("bld,df->blf", xk, p["wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    val = jnp.einsum("blf,fd->bld", kk, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr, p["wr"]).astype(jnp.float32))
+    out = (rr * val.astype(jnp.float32)).astype(x.dtype)
+    new_state = None if state is None else x[:, -1, :].astype(jnp.bfloat16)
+    return out, new_state
+
+
+def _layer_fwd(cfg, lp, x, lstate=None):
+    tm_state = None if lstate is None else {"wkv": lstate["wkv"],
+                                            "shift": lstate["tm_shift"]}
+    h, new_tm = apply_time_mix(lp["tm"], nn.apply_rmsnorm(lp["ln1"], x), cfg,
+                               tm_state)
+    x = x + h
+    h, new_cm = apply_channel_mix(lp["cm"], nn.apply_rmsnorm(lp["ln2"], x),
+                                  None if lstate is None else lstate["cm_shift"])
+    x = act_batch(x + h)
+    new_state = None
+    if lstate is not None:
+        new_state = {"wkv": new_tm["wkv"], "tm_shift": new_tm["shift"],
+                     "cm_shift": new_cm}
+    return x, new_state
+
+
+def _run(cfg, params, x, cache, remat=False, remat_policy=None):
+    x = nn.apply_rmsnorm(params["ln_in"], x)
+    if cache is None:
+        def body(carry, lp):
+            y, _ = _layer_fwd(cfg, lp, carry)
+            return y, None
+        if remat:
+            body = jax.checkpoint(body, policy=remat_policy)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None
+
+    def body(carry, xs):
+        lp, ls = xs
+        return _layer_fwd(cfg, lp, carry, ls)
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    return x, {"layers": new_layers}
+
+
+def forward(cfg, params, batch, *, remat=False, remat_policy=None):
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, _ = _run(cfg, params, x, None, remat, remat_policy)
+    return _logits(cfg, params, x)
+
+
+def prefill(cfg, params, batch, cache):
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, cache = _run(cfg, params, x, cache)
+    return _logits(cfg, params, x[:, -1:, :]), cache
+
+
+def decode(cfg, params, cache, batch, pos):
+    del pos  # state is position-free
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, cache = _run(cfg, params, x, cache)
+    return _logits(cfg, params, x), cache
+
+
+def loss(cfg, params, batch, *, remat=False, remat_policy=None):
+    from .transformer import ce_from_hidden
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, _ = _run(cfg, params, x, None, remat, remat_policy)
+    return ce_from_hidden(cfg, params, x, batch["tokens"])

@@ -1,0 +1,199 @@
+"""Dense GQA decoder-only transformer (qwen/mistral/olmo) + VLM backbone.
+
+Layers are stacked along a leading "layers" axis and executed with
+``lax.scan`` so the lowered HLO stays compact at 80 layers and XLA sees a
+homogeneous loop (prereq for scan-level remat + FSDP all-gather overlap).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import act_batch, act_logits
+from ..nn import layers as nn
+from ..nn.spec import TensorSpec, map_leaves, tensor
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+def stack_specs(spec_tree, n: int):
+    """Prepend a scanned 'layers' axis to every leaf."""
+    return map_leaves(
+        lambda _, s: TensorSpec((n,) + s.shape, s.dtype, ("layers",) + s.axes,
+                                s.init, s.scale),
+        spec_tree,
+    )
+
+
+def layer_spec(cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    s = {
+        "attn": nn.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                                  cfg.qkv_bias),
+        "mlp": nn.mlp_spec(cfg.d_model, cfg.d_ff),
+    }
+    if cfg.norm == "rmsnorm":
+        s["ln1"] = nn.rmsnorm_spec(cfg.d_model)
+        s["ln2"] = nn.rmsnorm_spec(cfg.d_model)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": nn.embedding_spec(cfg.vocab, cfg.d_model),
+        "layers": stack_specs(layer_spec(cfg), cfg.n_layers),
+    }
+    if cfg.norm == "rmsnorm":
+        s["ln_f"] = nn.rmsnorm_spec(cfg.d_model)
+    if not cfg.tied_embeddings:
+        s["lm_head"] = nn.lm_head_spec(cfg.d_model, cfg.vocab)
+    return s
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "kv": stack_specs(
+            nn.attention_cache_spec(batch, max_len, cfg.n_kv_heads, hd, nn.kv_cache_dtype(cfg)),
+            cfg.n_layers,
+        )
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: ModelConfig, lp: dict, x: jax.Array,
+               cache: dict | None = None, cache_pos: Any = None):
+    h = nn.apply_norm(cfg.norm, lp.get("ln1"), x)
+    h, new_cache = nn.apply_attention(
+        lp["attn"], h, rope_theta=cfg.rope_theta, cache=cache,
+        cache_pos=cache_pos, chunk=cfg.attn_chunk)
+    x = x + h
+    h = nn.apply_norm(cfg.norm, lp.get("ln2"), x)
+    x = act_batch(x + nn.apply_mlp(lp["mlp"], h))
+    return x, new_cache
+
+
+def _scan_layers(cfg: ModelConfig, params: dict, x: jax.Array,
+                 cache: dict | None, cache_pos: Any, remat: bool,
+                 remat_policy=None):
+    if cache is None:
+        def body(carry, lp):
+            y, _ = _layer_fwd(cfg, lp, carry)
+            return y, None
+        if remat:
+            body = jax.checkpoint(body, policy=remat_policy)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None
+
+    def body(carry, xs):
+        lp, lc = xs
+        y, nc = _layer_fwd(cfg, lp, carry, cache=lc, cache_pos=cache_pos)
+        return y, nc
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+    return x, {"kv": new_cache}
+
+
+def _trunk_in(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    return act_batch(x)
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = nn.apply_norm(cfg.norm, params.get("ln_f"), x)
+    if cfg.tied_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    return nn.apply_lm_head(params["lm_head"], x)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = False, remat_policy=None) -> jax.Array:
+    """Full training/scoring forward -> logits (B, S_total, vocab)."""
+    x = _trunk_in(cfg, params, batch)
+    x, _ = _scan_layers(cfg, params, x, None, None, remat, remat_policy)
+    return _logits(cfg, params, x)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache: dict):
+    """Populate the KV cache from a full prompt; returns last-pos logits."""
+    x = _trunk_in(cfg, params, batch)
+    x, cache = _scan_layers(cfg, params, x, cache, 0, False)
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return logits, cache
+
+
+def decode(cfg: ModelConfig, params: dict, cache: dict, batch: dict, pos):
+    """One-token decode step with KV cache valid up to ``pos``."""
+    x = nn.apply_embedding(params["embed"], batch["tokens"])  # (B, 1, d)
+    x, cache = _scan_layers(cfg, params, x, cache, pos, False)
+    return _logits(cfg, params, x), cache
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict, *,
+         remat: bool = False, remat_policy=None) -> jax.Array:
+    x = _trunk_in(cfg, params, batch)
+    x, _ = _scan_layers(cfg, params, x, None, None, remat, remat_policy)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1]:, :]
+    return ce_from_hidden(cfg, params, x, batch["tokens"])
+
+
+def ce_from_hidden(cfg: ModelConfig, params: dict, x: jax.Array,
+                   tokens: jax.Array, chunk: int | None = None) -> jax.Array:
+    """Memory-efficient next-token CE: the (B, S, vocab) logits tensor is
+    never materialized -- the head matmul + logsumexp run per sequence
+    chunk inside a rematerialized scan, so peak activation is
+    O(B * chunk * vocab / model_parallel) instead of O(B * S * vocab)."""
+    x = nn.apply_norm(cfg.norm, params.get("ln_f"), x)
+    w = (params["embed"]["table"].T if cfg.tied_embeddings
+         else params["lm_head"]["w"])
+    xs = x[:, :-1, :]
+    targets = tokens[:, 1:]
+    B, S, D = xs.shape
+    chunk = min(chunk or cfg.ce_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // chunk
+    xs = xs.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    targets = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_ce(xc, tc):
+        logits = act_logits(jnp.einsum("bcd,dv->bcv", xc, w).astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe_t = jnp.maximum(tc, 0)
+        picked = jnp.take_along_axis(logits, safe_t[..., None], axis=-1)[..., 0]
+        valid = (tc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - picked) * valid), jnp.sum(valid)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        s, c = chunk_ce(*inp)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, targets))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Dense-logits CE (smoke-scale reference; big cells use ce_from_hidden)."""
+    lf = logits[:, :-1, :].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

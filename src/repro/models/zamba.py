@@ -1,0 +1,126 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a *shared* attention block
+(weight-tied across applications) applied after every ``attn_every`` Mamba
+layers -- the weight sharing is the architecture's signature and is also the
+ideal case for REAP snapshots (one page set serves many layer applications).
+
+Sub-quadratic: runs the long_500k shape (SSM state is O(1); the shared
+attention applications use the chunked online-softmax attention over the
+cached prefix).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import act_batch
+from ..nn import layers as nn
+from .mamba2 import apply_mamba2, mamba2_spec, mamba2_state_spec
+from .transformer import _logits, next_token_loss, stack_specs
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    group = {
+        "mamba": stack_specs(
+            {"block": mamba2_spec(cfg), "ln": nn.rmsnorm_spec(cfg.d_model)},
+            cfg.attn_every),
+    }
+    return {
+        "embed": nn.embedding_spec(cfg.vocab, cfg.d_model),
+        "groups": stack_specs(group, n_groups(cfg)),
+        # one shared attention+mlp block, reused by every group
+        "shared_attn": {
+            "attn": nn.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                      hd, cfg.qkv_bias),
+            "mlp": nn.mlp_spec(cfg.d_model, cfg.d_ff),
+            "ln1": nn.rmsnorm_spec(cfg.d_model),
+            "ln2": nn.rmsnorm_spec(cfg.d_model),
+        },
+        "ln_f": nn.rmsnorm_spec(cfg.d_model),
+        "lm_head": nn.lm_head_spec(cfg.d_model, cfg.vocab),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "mamba": stack_specs(stack_specs(mamba2_state_spec(cfg, batch),
+                                         cfg.attn_every), n_groups(cfg)),
+        "attn_kv": stack_specs(
+            nn.attention_cache_spec(batch, max_len, cfg.n_kv_heads, hd, nn.kv_cache_dtype(cfg)),
+            n_groups(cfg)),
+    }
+
+
+def _shared_block(cfg, sp, x, cache=None, pos=None):
+    h = nn.apply_rmsnorm(sp["ln1"], x)
+    h, nc = nn.apply_attention(sp["attn"], h, rope_theta=cfg.rope_theta,
+                               cache=cache, cache_pos=pos, chunk=cfg.attn_chunk)
+    x = x + h
+    x = act_batch(x + nn.apply_mlp(sp["mlp"], nn.apply_rmsnorm(sp["ln2"], x)))
+    return x, nc
+
+
+def _run(cfg, params, x, cache, pos, remat=False, remat_policy=None):
+    shared = params["shared_attn"]
+
+    def mamba_body(carry, xs):
+        if cache is None:
+            lp = xs
+            h, _ = apply_mamba2(lp["block"], nn.apply_rmsnorm(lp["ln"], carry), cfg)
+            return act_batch(carry + h), None
+        lp, st = xs
+        h, ns = apply_mamba2(lp["block"], nn.apply_rmsnorm(lp["ln"], carry), cfg,
+                             state=st)
+        return act_batch(carry + h), ns
+
+    def group_body(carry, xs):
+        if cache is None:
+            gp = xs
+            y, _ = jax.lax.scan(mamba_body, carry, gp["mamba"])
+            y, _ = _shared_block(cfg, shared, y)
+            return y, None
+        gp, gc = xs
+        y, new_mamba = jax.lax.scan(mamba_body, carry, (gp["mamba"], gc["mamba"]))
+        y, new_kv = _shared_block(cfg, shared, y, cache=gc["attn_kv"], pos=pos)
+        return y, {"mamba": new_mamba, "attn_kv": new_kv}
+
+    if cache is None:
+        body = jax.checkpoint(group_body, policy=remat_policy) if remat else group_body
+        x, _ = jax.lax.scan(body, x, params["groups"])
+        return x, None
+    x, new_cache = jax.lax.scan(
+        group_body, x, (params["groups"],
+                        {"mamba": cache["mamba"], "attn_kv": cache["attn_kv"]}))
+    return x, new_cache
+
+
+def forward(cfg, params, batch, *, remat=False, remat_policy=None):
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, _ = _run(cfg, params, x, None, None, remat, remat_policy)
+    return _logits(cfg, params, x)
+
+
+def prefill(cfg, params, batch, cache):
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, cache = _run(cfg, params, x, cache, 0)
+    return _logits(cfg, params, x[:, -1:, :]), cache
+
+
+def decode(cfg, params, cache, batch, pos):
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, cache = _run(cfg, params, x, cache, pos)
+    return _logits(cfg, params, x), cache
+
+
+def loss(cfg, params, batch, *, remat=False, remat_policy=None):
+    from .transformer import ce_from_hidden
+    x = nn.apply_embedding(params["embed"], batch["tokens"])
+    x, _ = _run(cfg, params, x, None, None, remat, remat_policy)
+    return ce_from_hidden(cfg, params, x, batch["tokens"])

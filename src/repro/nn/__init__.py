@@ -1,0 +1,2 @@
+from . import layers, spec
+from .spec import TensorSpec, abstract, initialize, shardings, tensor

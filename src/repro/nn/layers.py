@@ -1,0 +1,331 @@
+"""Functional building blocks shared by all model families.
+
+Every block comes as a pair: ``<block>_spec(cfg...) -> spec tree`` and
+``apply_<block>(params, ...) -> array``.  Specs carry logical axis names
+("embed", "heads", "kv_heads", "head_dim", "mlp", "vocab", "expert",
+"layers", "state", ...) that the sharding rules in
+``repro.distributed.sharding`` map onto mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .spec import TensorSpec, tensor
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": tensor(d, axes=("embed",), dtype=jnp.float32, init="ones")}
+
+
+def apply_rmsnorm(p: dict | None, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if p is not None:
+        y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+def apply_nonparam_ln(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style non-parametric LayerNorm (no scale, no bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, p: dict | None, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return apply_rmsnorm(p, x)
+    if kind == "nonparam_ln":
+        return apply_nonparam_ln(x)
+    raise ValueError(f"unknown norm {kind}")
+
+
+def norm_spec(kind: str, d: int) -> dict | None:
+    return rmsnorm_spec(d) if kind == "rmsnorm" else None
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d: int) -> dict:
+    return {"table": tensor(vocab, d, axes=("vocab", "embed"), init="embed")}
+
+
+def apply_embedding(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_spec(d: int, vocab: int) -> dict:
+    return {"w": tensor(d, vocab, axes=("embed", "vocab"), init="trunc_fan_in")}
+
+
+def apply_lm_head(p: dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions: (...,) int -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked online-softmax => memory-bounded at 32k/500k)
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(d: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool = False) -> dict:
+    s = {
+        "wq": tensor(d, n_heads, head_dim, axes=("embed", "heads", "head_dim"),
+                     init="trunc_fan_in"),
+        "wk": tensor(d, n_kv, head_dim, axes=("embed", "kv_heads", "head_dim"),
+                     init="trunc_fan_in"),
+        "wv": tensor(d, n_kv, head_dim, axes=("embed", "kv_heads", "head_dim"),
+                     init="trunc_fan_in"),
+        "wo": tensor(n_heads, head_dim, d, axes=("heads", "head_dim", "embed"),
+                     init="trunc_fan_in"),
+    }
+    if qkv_bias:
+        s["bq"] = tensor(n_heads, head_dim, axes=("heads", "head_dim"), init="zeros")
+        s["bk"] = tensor(n_kv, head_dim, axes=("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = tensor(n_kv, head_dim, axes=("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _qkv(p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_offset: Any = 0,
+                      kv_len: Any = None, chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks (flash semantics).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H % KV == 0.
+    ``q_offset`` -- absolute position of q[0] (for causal masking in decode).
+    ``kv_len``   -- valid prefix length of the KV cache (None = all valid).
+    Peak activation is O(B * H * Sq * chunk) regardless of Skv, which is what
+    makes 32k prefill / 500k decode lowerable without O(L^2) buffers.
+    """
+    from ..distributed.sharding import act_heads
+
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    q = act_heads(q)  # shard heads on 'model' in activations (prefill scores)
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32) * scale
+
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    q_pos = q_offset + jnp.arange(Sq)
+    limit = Skv if kv_len is None else kv_len
+    NEG = jnp.float32(-1e30)
+
+    def block(kb, vb, kv_start):
+        """One KV block: scores + additive bias (never a broadcast pred)."""
+        kv_pos = kv_start + jnp.arange(kb.shape[1])
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb.astype(jnp.float32))
+        bias = jnp.where(kv_pos[None, :] < limit, 0.0, NEG)
+        if causal:
+            bias = bias + jnp.where(kv_pos[None, :] <= q_pos[:, None], 0.0, NEG)
+        return s + bias[None, :, None, None, :]
+
+    if n_chunks == 1:
+        # decode / short-KV fast path: no scan, no cache resharding; the
+        # softmax over the (possibly sequence-sharded) KV axis lowers to
+        # partial reductions + a small all-reduce.
+        s = block(k, v, 0)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+        out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-20)
+        return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+
+    # checkpoint the step: the backward recomputes per-chunk scores instead
+    # of storing O(Sq x chunk) probability residuals for every chunk
+    @jax.checkpoint
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp
+        s = block(kb, vb, idx * chunk)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # fully-masked rows: m_new is very negative; exp underflows to 0
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def apply_attention(p: dict, x: jax.Array, *, rope_theta: float,
+                    positions: jax.Array | None = None,
+                    cache: dict | None = None, cache_pos: Any = None,
+                    chunk: int = 1024):
+    """Self-attention. If ``cache`` is given, runs in decode mode: appends the
+    new K/V at ``cache_pos`` and attends over the valid cache prefix.
+
+    Returns (out, new_cache) where new_cache is None when cache is None.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x)
+    head_dim = q.shape[-1]
+    if positions is None:
+        base = 0 if cache is None else cache_pos
+        positions = base + jnp.arange(S)
+    cos, sin = rope_table(positions, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+        new_cache = None
+    else:
+        int8_kv = "k_scale" in cache
+        if int8_kv:
+            kq, ks = _quant_kv(k)
+            vq, vs = _quant_kv(v)
+            dus = jax.lax.dynamic_update_slice_in_dim
+            ck = dus(cache["k"], kq, cache_pos, axis=1)
+            cv = dus(cache["v"], vq, cache_pos, axis=1)
+            cks = dus(cache["k_scale"], ks, cache_pos, axis=1)
+            cvs = dus(cache["v_scale"], vs, cache_pos, axis=1)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            # dequantized views are per-layer transients
+            ck = ck.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+            cv = cv.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        if S == 1:
+            # decode: one-shot attention over the (sequence-sharded) cache.
+            # Scores are (B, 1, KV, G, S_kv) -- tiny per device -- and the
+            # softmax over the sharded axis becomes partial-reduce +
+            # all-reduce instead of a scan that would reshard the cache
+            # chunk-by-chunk (involuntary full rematerialization).
+            out = chunked_attention(q, ck, cv, causal=True, q_offset=cache_pos,
+                                    kv_len=cache_pos + S,
+                                    chunk=cache["k"].shape[1])
+        else:
+            # prefill from position 0: attending over the fresh K/V is
+            # mathematically identical to attending over the cache prefix
+            # and avoids re-slicing the sequence-sharded cache.
+            out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def attention_cache_spec(batch: int, max_len: int, n_kv: int, head_dim: int,
+                         dtype=jnp.bfloat16) -> dict:
+    # The KV cache is sharded batch x sequence (not kv_heads): at 32k-500k
+    # contexts the cache dominates HBM and kv_heads (4-8) cannot fill a
+    # 16-way model axis without padding waste -- see DESIGN.md §4.
+    s = {
+        "k": tensor(batch, max_len, n_kv, head_dim,
+                    axes=("batch", "seq", None, "head_dim"),
+                    dtype=dtype, init="zeros"),
+        "v": tensor(batch, max_len, n_kv, head_dim,
+                    axes=("batch", "seq", None, "head_dim"),
+                    dtype=dtype, init="zeros"),
+    }
+    if jnp.dtype(dtype) == jnp.int8:
+        # per (token, kv-head) quantization scales (beyond-paper: int8 KV
+        # cache halves the decode working set vs bf16)
+        for n in ("k_scale", "v_scale"):
+            s[n] = tensor(batch, max_len, n_kv,
+                          axes=("batch", "seq", None),
+                          dtype=jnp.float32, init="zeros")
+    return s
+
+
+def _quant_kv(x: jax.Array):
+    """(B, S, KV, D) -> int8 values + per-(token, head) scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_cache_dtype(cfg) -> Any:
+    return jnp.dtype(getattr(cfg, "kv_cache_dtype", "bfloat16"))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, d_ff: int) -> dict:
+    return {
+        "wi_gate": tensor(d, d_ff, axes=("embed", "mlp"), init="trunc_fan_in"),
+        "wi_up": tensor(d, d_ff, axes=("embed", "mlp"), init="trunc_fan_in"),
+        "wo": tensor(d_ff, d, axes=("mlp", "embed"), init="trunc_fan_in"),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

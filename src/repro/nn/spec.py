@@ -1,0 +1,221 @@
+"""Parameter specification trees.
+
+Models in REAP-JX describe their parameters as a nested-dict tree of
+:class:`TensorSpec` leaves (shape, dtype, logical axis names, init law).
+The same spec tree drives four consumers:
+
+* ``initialize``     -- materialize real arrays (smoke tests / examples),
+* ``abstract``       -- ``jax.ShapeDtypeStruct`` stand-ins (multi-pod dry-run,
+                        nothing is ever allocated),
+* ``shardings``      -- ``NamedSharding`` per leaf from logical-axis rules,
+* ``core.snapshot``  -- the flat page-aligned guest-memory-file layout.
+
+Everything is plain functional JAX: no framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = [
+    "TensorSpec",
+    "tensor",
+    "abstract",
+    "initialize",
+    "shardings",
+    "partition_specs",
+    "tree_paths",
+    "leaf_items",
+    "num_params",
+    "num_bytes",
+    "map_leaves",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """A single parameter/buffer declaration."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: tuple[str | None, ...] = ()
+    init: str = "normal"  # normal | zeros | ones | embed | trunc_fan_in
+    scale: float | None = None
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} does not match shape {self.shape}"
+            )
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+    def as_sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def tensor(*shape: int, axes: tuple[str | None, ...] = (), dtype=jnp.bfloat16,
+           init: str = "normal", scale: float | None = None) -> TensorSpec:
+    if not axes:
+        axes = (None,) * len(shape)
+    return TensorSpec(tuple(shape), dtype, tuple(axes), init, scale)
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def tree_paths(tree, prefix: str = "") -> Iterator[tuple[str, TensorSpec]]:
+    """Deterministic depth-first (path, leaf) iteration, sorted by key."""
+    if _is_leaf(tree):
+        yield prefix.rstrip("/"), tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from tree_paths(tree[k], prefix + str(k) + "/")
+        return
+    if isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from tree_paths(v, prefix + str(i) + "/")
+        return
+    raise TypeError(f"unsupported spec-tree node: {type(tree)}")
+
+
+def leaf_items(tree) -> list[tuple[str, TensorSpec]]:
+    return list(tree_paths(tree))
+
+
+def map_leaves(fn: Callable[[str, TensorSpec], Any], tree, prefix: str = ""):
+    """Structure-preserving map with path argument."""
+    if _is_leaf(tree):
+        return fn(prefix.rstrip("/"), tree)
+    if isinstance(tree, dict):
+        return {k: map_leaves(fn, v, prefix + str(k) + "/") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        seq = [map_leaves(fn, v, prefix + str(i) + "/") for i, v in enumerate(tree)]
+        return type(tree)(seq)
+    raise TypeError(f"unsupported spec-tree node: {type(tree)}")
+
+
+def num_params(tree) -> int:
+    return sum(s.size for _, s in tree_paths(tree))
+
+
+def num_bytes(tree) -> int:
+    return sum(s.nbytes for _, s in tree_paths(tree))
+
+
+def abstract(tree):
+    """ShapeDtypeStruct tree -- used by the dry-run, never allocates."""
+    return map_leaves(lambda _, s: s.as_sds(), tree)
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.md5(path.encode()).digest()
+    return jax.random.fold_in(key, int.from_bytes(digest[:4], "little"))
+
+
+def _init_one(key: jax.Array, s: TensorSpec) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init in ("normal", "embed"):
+        scale = s.scale if s.scale is not None else 0.02
+        x = jax.random.normal(key, s.shape, jnp.float32) * scale
+        return x.astype(s.dtype)
+    if s.init == "trunc_fan_in":
+        fan_in = s.shape[0] if len(s.shape) >= 2 else s.size
+        scale = s.scale if s.scale is not None else 1.0
+        std = scale / math.sqrt(max(fan_in, 1))
+        x = jax.random.truncated_normal(key, -2.0, 2.0, s.shape, jnp.float32) * std
+        return x.astype(s.dtype)
+    raise ValueError(f"unknown init law {s.init!r}")
+
+
+def initialize(tree, key: jax.Array):
+    """Materialize the spec tree into real arrays (deterministic per-path)."""
+    return map_leaves(lambda p, s: _init_one(_path_key(key, p), s), tree)
+
+
+def _partition_spec(s: TensorSpec, rules: dict[str, Any],
+                    mesh=None) -> PartitionSpec:
+    """Logical axes -> PartitionSpec under `rules`.
+
+    Never reuses a mesh axis within one tensor, and (when ``mesh`` is given)
+    only assigns mesh axes whose product divides the dimension -- jit
+    in_shardings require exact divisibility (e.g. kv_heads=8 cannot shard a
+    16-way model axis and falls back to replication).
+    """
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(s.shape, s.axes):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        picked = [a for a in mesh_axes if a not in used]
+        if mesh is not None:
+            # longest prefix whose size divides the dimension
+            while picked:
+                prod = math.prod(mesh.shape[a] for a in picked)
+                if dim % prod == 0:
+                    break
+                picked = picked[:-1]
+        if not picked:
+            entries.append(None)
+            continue
+        used.update(picked)
+        entries.append(tuple(picked) if len(picked) > 1 else picked[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def partition_specs(tree, rules: dict[str, Any], mesh=None):
+    return map_leaves(lambda _, s: _partition_spec(s, rules, mesh), tree)
+
+
+def shardings(tree, mesh, rules: dict[str, Any]):
+    return map_leaves(
+        lambda _, s: NamedSharding(mesh, _partition_spec(s, rules, mesh)), tree
+    )
+
+
+def host_initialize(tree, seed: int = 0):
+    """NumPy-side initialization for the snapshot substrate (no device arrays).
+
+    Used when building guest-memory files for instances far larger than what
+    we want to keep as jax arrays; deterministic per path.
+    """
+    out = {}
+    for path, s in tree_paths(tree):
+        rng = np.random.default_rng(
+            int.from_bytes(hashlib.md5(f"{seed}:{path}".encode()).digest()[:8], "little")
+        )
+        if s.init == "zeros":
+            arr = np.zeros(s.shape, dtype=jnp.dtype(s.dtype))
+        elif s.init == "ones":
+            arr = np.ones(s.shape, dtype=jnp.dtype(s.dtype))
+        else:
+            scale = s.scale if s.scale is not None else 0.02
+            arr = (rng.standard_normal(s.shape, dtype=np.float32) * scale).astype(
+                jnp.dtype(s.dtype)
+            )
+        out[path] = arr
+    return out

@@ -1,0 +1,2 @@
+from .instance import ExecutableCache, FunctionInstance, State
+from .orchestrator import Orchestrator

@@ -1,0 +1,122 @@
+"""vHive-CRI orchestrator analogue: function registry, instance pool,
+router/data-plane, autoscaler-lite with keepalive + scale-to-zero.
+
+The orchestrator owns the snapshot store and the per-function REAP records.
+Per the paper's AWS-Lambda model, one instance processes one invocation at
+a time; concurrent invocations of the same function spawn additional
+instances (Fig. 9's scalability experiment drives exactly this path).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any
+
+from ..configs.base import ModelConfig
+from ..core import ReapConfig, build_instance_snapshot
+from ..core.reap import ColdStartReport, drop_record, has_record
+from .instance import FunctionInstance, State
+
+
+class FunctionRecord:
+    def __init__(self, name: str, cfg: ModelConfig, base: str):
+        self.name = name
+        self.cfg = cfg
+        self.base = base
+        self.lock = threading.Lock()
+        self.idle: list[FunctionInstance] = []
+        self.stats: list[ColdStartReport] = []
+
+
+class Orchestrator:
+    def __init__(self, store_dir: str, *, reap: ReapConfig | None = None,
+                 mode: str = "reap", keepalive_s: float = 60.0,
+                 warm_limit: int = 8):
+        """mode: 'reap' (record+prefetch) | 'vanilla' (baseline snapshots)."""
+        self.store_dir = store_dir
+        self.reap = reap or ReapConfig()
+        self.mode = mode
+        self.keepalive_s = keepalive_s
+        self.warm_limit = warm_limit
+        self.functions: dict[str, FunctionRecord] = {}
+        self._lock = threading.Lock()
+        os.makedirs(store_dir, exist_ok=True)
+
+    # -- control plane -------------------------------------------------
+
+    def register(self, name: str, cfg: ModelConfig, *, seed: int = 0,
+                 rebuild: bool = False,
+                 warmup_batch: dict | None = None) -> FunctionRecord:
+        base = os.path.join(self.store_dir, name)
+        if rebuild or not os.path.exists(base + ".mem"):
+            build_instance_snapshot(cfg, base, seed=seed)
+            drop_record(base)
+        if warmup_batch is not None:
+            # deploy-time compile of all invocation executables (the paper's
+            # analogue: booting/initialization happens once, off the
+            # invocation critical path)
+            from .instance import ExecutableCache
+            ExecutableCache.warm(cfg, warmup_batch)
+        with self._lock:
+            rec = self.functions.get(name)
+            if rec is None:
+                rec = FunctionRecord(name, cfg, base)
+                self.functions[name] = rec
+        return rec
+
+    def reset_records(self, name: str) -> None:
+        drop_record(self.functions[name].base)
+
+    def scale_to_zero(self, name: str) -> None:
+        rec = self.functions[name]
+        with rec.lock:
+            for inst in rec.idle:
+                inst.reclaim()
+            rec.idle.clear()
+
+    def reap_idle(self) -> int:
+        """Keepalive sweep: reclaim instances idle past the deadline."""
+        now = time.monotonic()
+        n = 0
+        for rec in self.functions.values():
+            with rec.lock:
+                keep = []
+                for inst in rec.idle:
+                    if now - inst.last_used > self.keepalive_s:
+                        inst.reclaim()
+                        n += 1
+                    else:
+                        keep.append(inst)
+                rec.idle = keep
+        return n
+
+    # -- data plane ------------------------------------------------------
+
+    def invoke(self, name: str, batch: dict,
+               *, force_cold: bool = False) -> tuple[Any, ColdStartReport]:
+        """Route one invocation; cold-starts a new instance if needed."""
+        rec = self.functions[name]
+        inst: FunctionInstance | None = None
+        if not force_cold:
+            with rec.lock:
+                if rec.idle:
+                    inst = rec.idle.pop()
+        cold = inst is None
+        if cold:
+            mode = "vanilla" if self.mode == "vanilla" else "auto"
+            inst = FunctionInstance(name, rec.cfg, rec.base, self.reap,
+                                    mode=mode)
+        logits, _ = inst.invoke(
+            batch, parallel_faults=self.reap.parallel_faults)
+        if cold:
+            inst.finish_cold()
+            inst.make_warm()  # instance stays memory-resident until reclaimed
+        report = inst.report
+        with rec.lock:
+            rec.stats.append(report)
+            if len(rec.idle) < self.warm_limit:
+                rec.idle.append(inst)
+            else:
+                inst.reclaim()
+        return logits, report

@@ -1,0 +1,117 @@
+"""Sharded optimizers (no external deps): AdamW and SGD-momentum.
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the sharding
+rules (and the snapshot arena layout) apply to it unchanged -- which is what
+makes REAP-accelerated checkpoint *restart* work: params + opt state are a
+100%-stable working set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.spec import TensorSpec, map_leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def state_specs(param_specs_tree, opt: OptConfig):
+    """Spec tree for optimizer state (drives sharding + snapshot layout)."""
+    def f32_like(_, s: TensorSpec) -> TensorSpec:
+        return TensorSpec(s.shape, jnp.float32, s.axes, "zeros", None)
+
+    if opt.kind == "adamw":
+        return {
+            "mu": map_leaves(f32_like, param_specs_tree),
+            "nu": map_leaves(f32_like, param_specs_tree),
+            "count": TensorSpec((), jnp.int32, (), "zeros"),
+        }
+    if opt.kind == "sgdm":
+        return {
+            "mu": map_leaves(f32_like, param_specs_tree),
+            "count": TensorSpec((), jnp.int32, (), "zeros"),
+        }
+    raise ValueError(opt.kind)
+
+
+def init_state(params, opt: OptConfig):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if opt.kind == "adamw":
+        return {"mu": zeros, "nu": jax.tree.map(jnp.copy, zeros),
+                "count": jnp.zeros((), jnp.int32)}
+    return {"mu": zeros, "count": jnp.zeros((), jnp.int32)}
+
+
+def lr_at(opt: OptConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = step / jnp.maximum(opt.warmup_steps, 1)
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / jnp.maximum(opt.total_steps - opt.warmup_steps, 1), 0, 1)
+    cos = opt.min_lr_ratio + (1 - opt.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return opt.lr * jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply_updates(params, grads, state, opt: OptConfig):
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+    count = state["count"] + 1
+    lr = lr_at(opt, count)
+
+    if opt.kind == "adamw":
+        def upd(p, g, m, v):
+            m2 = opt.b1 * m + (1 - opt.b1) * g
+            v2 = opt.b2 * v + (1 - opt.b2) * jnp.square(g)
+            mhat = m2 / (1 - opt.b1 ** count.astype(jnp.float32))
+            vhat = v2 / (1 - opt.b2 ** count.astype(jnp.float32))
+            step = mhat / (jnp.sqrt(vhat) + opt.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + opt.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step
+            return p2.astype(p.dtype), m2, v2
+        flat = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"mu": new_m, "nu": new_v, "count": count}
+    else:  # sgdm
+        def upd(p, g, m):
+            m2 = 0.9 * m + g
+            p2 = p.astype(jnp.float32) - lr * m2
+            return p2.astype(p.dtype), m2
+        flat = jax.tree.map(upd, params, grads, state["mu"])
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"mu": new_m, "count": count}
+
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

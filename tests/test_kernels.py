@@ -1,0 +1,193 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)
+plus hypothesis property tests on the scan kernels' state-passing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+rng = np.random.default_rng(42)
+
+
+def _r(*shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,D,dtype", [
+    (2, 256, 4, 2, 64, jnp.float32),
+    (1, 128, 8, 8, 128, jnp.float32),
+    (2, 384, 6, 2, 80, jnp.float32),
+    (1, 256, 4, 1, 64, jnp.bfloat16),
+])
+def test_flash_attention(B, S, H, KV, D, dtype):
+    from repro.kernels.flash_attention.ops import mha
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = _r(B, S, H, D).astype(dtype)
+    k = _r(B, S, KV, D).astype(dtype)
+    v = _r(B, S, KV, D).astype(dtype)
+    out = mha(q, k, v, causal=True)
+    ref = jnp.moveaxis(flash_attention_ref(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=True), 1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,D,bk", [
+    (2, 1024, 8, 2, 64, 256),
+    (1, 2048, 4, 4, 128, 512),
+    (3, 512, 16, 2, 80, 128),
+])
+def test_decode_attention(B, S, H, KV, D, bk):
+    from repro.kernels.decode_attention.ops import gqa_decode
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = _r(B, 1, H, D)
+    k = _r(B, S, KV, D)
+    v = _r(B, S, KV, D)
+    kv_len = jnp.asarray(rng.integers(1, S, B).astype(np.int32))
+    out = gqa_decode(q, k, v, kv_len, bk=bk)
+    G = H // KV
+    ref = decode_attention_ref(q[:, 0].reshape(B, KV, G, D),
+                               jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+                               kv_len).reshape(B, 1, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Bz,L,H,P,N,chunk", [
+    (2, 256, 4, 64, 64, 64),
+    (1, 512, 2, 128, 32, 128),
+    (2, 128, 8, 32, 16, 32),
+])
+def test_mamba2_ssd(Bz, L, H, P, N, chunk):
+    from repro.kernels.mamba2_scan.ops import mamba2_ssd
+    from repro.kernels.mamba2_scan.ref import ssd_scan_ref
+    x = _r(Bz, L, H, P)
+    dt = jnp.abs(_r(Bz, L, H, scale=0.1))
+    A = -jnp.abs(_r(H))
+    B = _r(Bz, L, N, scale=0.3)
+    C = _r(Bz, L, N, scale=0.3)
+    D = _r(H)
+    h0 = _r(Bz, H, N, P, scale=0.1)
+    y, hT = mamba2_ssd(x, dt, A, B, C, D, h0, chunk=chunk)
+    xf = x.transpose(0, 2, 1, 3).reshape(Bz * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bz * H, L)
+    Bf = jnp.broadcast_to(B[:, None], (Bz, H, L, N)).reshape(Bz * H, L, N)
+    Cf = jnp.broadcast_to(C[:, None], (Bz, H, L, N)).reshape(Bz * H, L, N)
+    yr, hTr = ssd_scan_ref(xf, dtf, jnp.tile(A, Bz), Bf, Cf,
+                           h0.reshape(Bz * H, N, P))
+    yr = yr.reshape(Bz, H, L, P).transpose(0, 2, 1, 3) + x * D[None, None, :, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(hT.reshape(Bz * H, N, P)),
+                               np.asarray(hTr), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 WKV scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,H,D,chunk", [
+    (2, 128, 4, 64, 32),
+    (1, 256, 2, 32, 64),
+    (2, 96, 8, 16, 16),
+])
+def test_wkv6(B, L, H, D, chunk):
+    from repro.kernels.rwkv6_scan.ops import wkv6
+    from repro.kernels.rwkv6_scan.ref import wkv6_scan_ref
+    r = _r(B, L, H, D)
+    k = _r(B, L, H, D, scale=0.3)
+    v = _r(B, L, H, D)
+    logw = -jnp.abs(_r(B, L, H, D, scale=0.5)) - 0.05
+    u = _r(H, D, scale=0.2)
+    s0 = _r(B, H, D, D, scale=0.1)
+    y, sT = wkv6(r, k, v, logw, u, s0, chunk=chunk)
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, L, D)
+    yr, sTr = wkv6_scan_ref(flat(r), flat(k), flat(v), flat(logw),
+                            jnp.tile(u, (B, 1)), s0.reshape(B * H, D, D))
+    yr = yr.reshape(B, H, L, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT.reshape(B * H, D, D)),
+                               np.asarray(sTr), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# page gather/scatter (the REAP kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pages,page_elems,n,dtype", [
+    (64, 300, 17, np.float32),
+    (128, 512, 128, np.float32),
+    (32, 128, 5, np.int32),
+])
+def test_page_gather_scatter(n_pages, page_elems, n, dtype):
+    from repro.kernels.page_gather.ops import gather_pages, scatter_pages
+    from repro.kernels.page_gather.ref import page_gather_ref
+    if dtype == np.int32:
+        table = jnp.asarray(rng.integers(0, 1000, (n_pages, page_elems), dtype))
+    else:
+        table = _r(n_pages, page_elems)
+    idx = jnp.asarray(rng.permutation(n_pages)[:n].astype(np.int32))
+    ws = gather_pages(table, idx)
+    np.testing.assert_array_equal(np.asarray(ws),
+                                  np.asarray(page_gather_ref(table, idx)))
+    dest = jnp.zeros_like(table)
+    out = scatter_pages(ws, idx, dest)
+    ref = np.zeros_like(np.asarray(table))
+    ref[np.asarray(idx)] = np.asarray(ws)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+# ---------------------------------------------------------------------------
+# property tests: chunked == recurrent for any chunk split
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(L=st.integers(2, 64), chunk=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_wkv6_chunk_invariance(L, chunk, seed):
+    """The chunked WKV6 evaluation must be invariant to the chunk size."""
+    from repro.models.rwkv6 import wkv6_chunked
+    r_ = np.random.default_rng(seed)
+    B, H, D = 1, 2, 8
+    r = jnp.asarray(r_.standard_normal((B, L, H, D)).astype(np.float32))
+    k = jnp.asarray(r_.standard_normal((B, L, H, D)).astype(np.float32) * 0.3)
+    v = jnp.asarray(r_.standard_normal((B, L, H, D)).astype(np.float32))
+    logw = jnp.asarray(-np.abs(r_.standard_normal((B, L, H, D))).astype(np.float32) - 0.02)
+    u = jnp.asarray(r_.standard_normal((H, D)).astype(np.float32) * 0.1)
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    y1, s1 = wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    y2, s2 = wkv6_chunked(r, k, v, logw, u, s0, chunk=L)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(L=st.integers(2, 64), chunk=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_ssd_chunk_invariance(L, chunk, seed):
+    from repro.models.mamba2 import ssd_chunked
+    r_ = np.random.default_rng(seed)
+    B, H, P, N = 1, 2, 8, 4
+    xh = jnp.asarray(r_.standard_normal((B, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(r_.standard_normal((B, L, H))).astype(np.float32) * 0.2)
+    A = jnp.asarray(-np.abs(r_.standard_normal(H)).astype(np.float32))
+    Bm = jnp.asarray(r_.standard_normal((B, L, N)).astype(np.float32) * 0.3)
+    Cm = jnp.asarray(r_.standard_normal((B, L, N)).astype(np.float32) * 0.3)
+    D = jnp.zeros(H, jnp.float32)
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    y1, s1 = ssd_chunked(xh, dt, A, Bm, Cm, D, h0, chunk=chunk)
+    y2, s2 = ssd_chunked(xh, dt, A, Bm, Cm, D, h0, chunk=L)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)

@@ -1,0 +1,159 @@
+"""REAP core invariants: arena layout, fault semantics, record/prefetch,
+misprediction handling, re-record policy -- with hypothesis property tests
+on the trace/WS machinery."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arena import (PAGE, ArenaLayout, GuestMemoryFile,
+                              InstanceArena)
+from repro.core import reap as reap_mod
+from repro.core.reap import ReapConfig
+
+
+@pytest.fixture()
+def small_gm(tmp_path):
+    tensors = [
+        ("infra/tab", (3000,), "uint8", "infra"),
+        ("params/w", (64, 33), "float32", "serve"),
+        ("boot/opt", (64, 33), "float32", "boot"),
+    ]
+    layout = ArenaLayout.build(tensors)
+    arrays = {
+        "infra/tab": np.arange(3000, dtype=np.uint8),
+        "params/w": np.random.default_rng(0).standard_normal((64, 33)).astype(np.float32),
+        "boot/opt": np.ones((64, 33), np.float32),
+    }
+    return GuestMemoryFile.create(str(tmp_path / "fn"), layout, arrays), arrays
+
+
+def test_layout_page_alignment(small_gm):
+    gm, _ = small_gm
+    for e in gm.layout.entries.values():
+        assert e.offset % PAGE == 0
+    assert gm.layout.total_bytes % PAGE == 0
+    assert os.path.getsize(gm.mem_path) == gm.layout.total_bytes
+
+
+def test_fault_roundtrip_and_stats(small_gm):
+    gm, arrays = small_gm
+    arena = InstanceArena(gm)
+    w = arena.tensor("params/w")
+    np.testing.assert_array_equal(w, arrays["params/w"])
+    n_pages = gm.layout.entries["params/w"].n_pages
+    assert arena.stats.n_faults == n_pages
+    # second access: no new faults
+    arena.tensor("params/w")
+    assert arena.stats.n_faults == n_pages
+    arena.close()
+
+
+def test_row_granular_faults(small_gm):
+    gm, arrays = small_gm
+    arena = InstanceArena(gm)
+    arena.tensor_rows("params/w", [0, 1])   # rows 0-1: first page only
+    assert arena.stats.n_faults == 1
+    w = arena.tensor("params/w", fault=False)
+    np.testing.assert_array_equal(w[0], arrays["params/w"][0])
+    arena.close()
+
+
+def test_record_then_prefetch_eliminates_faults(small_gm):
+    gm, arrays = small_gm
+    base = gm.base
+    arena = InstanceArena(gm)
+    arena.tensor("infra/tab")
+    arena.tensor("params/w")
+    reap_mod.write_record(base, arena.stats.trace)
+    arena.close()
+    assert reap_mod.has_record(base)
+
+    arena2 = InstanceArena(GuestMemoryFile.open(base))
+    n, secs = reap_mod.prefetch(arena2, base, ReapConfig())
+    assert n == arena2.resident.sum()
+    # same access pattern: zero residual faults, identical contents
+    f = arena2.touch_pages(gm.layout.pages_of("params/w"))
+    assert f == 0
+    np.testing.assert_array_equal(arena2.tensor("params/w", fault=False),
+                                  arrays["params/w"])
+    arena2.close()
+
+
+def test_boot_region_not_in_working_set(small_gm):
+    gm, _ = small_gm
+    arena = InstanceArena(gm)
+    arena.tensor("infra/tab")
+    arena.tensor("params/w")
+    boot_pages = gm.layout.region_pages("boot")
+    assert not boot_pages & set(arena.stats.trace)
+    assert arena.resident_bytes < gm.layout.total_bytes
+    arena.close()
+
+
+def test_rerecord_policy(small_gm):
+    gm, _ = small_gm
+    base = gm.base
+    # record only the infra pages
+    arena = InstanceArena(gm)
+    arena.tensor("infra/tab")
+    reap_mod.write_record(base, arena.stats.trace)
+    arena.close()
+    # prefetch, then touch a much larger set -> residual ratio > threshold
+    mon = reap_mod.Monitor(GuestMemoryFile.open(base), base,
+                           ReapConfig(rerecord_threshold=0.5))
+    assert mon.mode == "prefetch"
+    mon.start()
+    mon.arena.tensor("params/w")
+    mon.arena.tensor("boot/opt")
+    out = mon.finish()
+    assert out.get("rerecord") is True
+    assert not reap_mod.has_record(base)  # dropped -> next start re-records
+    mon.arena.close()
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace=st.lists(st.integers(0, 63), min_size=1, max_size=200))
+def test_write_record_dedup_preserves_order(tmp_path_factory, trace):
+    """Trace file = first-touch order with duplicates dropped (§5.2.1)."""
+    tmp = tmp_path_factory.mktemp("rec")
+    layout = ArenaLayout.build([("params/big", (64 * PAGE,), "uint8", "serve")])
+    arrays = {"params/big": np.arange(64 * PAGE, dtype=np.uint8)}
+    gm = GuestMemoryFile.create(str(tmp / "fn"), layout, arrays)
+    n, nbytes = reap_mod.write_record(gm.base, trace)
+    got = np.load(reap_mod.trace_path(gm.base))
+    expected = list(dict.fromkeys(trace))
+    assert list(got) == expected
+    assert nbytes == len(expected) * PAGE
+    # WS file contents = pages in trace order
+    with open(reap_mod.ws_path(gm.base), "rb") as f:
+        ws = f.read()
+    for i, p in enumerate(expected):
+        assert ws[i * PAGE:(i + 1) * PAGE] == bytes(
+            arrays["params/big"][p * PAGE:(p + 1) * PAGE])
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.lists(st.integers(0, 63), min_size=1, max_size=64))
+def test_row_pages_cover_rows(rows):
+    layout = ArenaLayout.build([("t", (64, 100), "float32", "serve")])
+    e = layout.entries["t"]
+    pages = e.row_pages(rows)
+    row_bytes = e.nbytes // 64
+    for r in rows:
+        lo = e.offset + r * row_bytes
+        hi = lo + row_bytes - 1
+        assert lo // PAGE in pages and hi // PAGE in pages
+
+
+def test_parallel_faults_match_serial(small_gm):
+    gm, arrays = small_gm
+    a1 = InstanceArena(gm)
+    a1.touch_pages(gm.layout.pages_of("params/w"))
+    a2 = InstanceArena(GuestMemoryFile.open(gm.base))
+    a2.touch_pages(gm.layout.pages_of("params/w"), parallel=4)
+    np.testing.assert_array_equal(a1.tensor("params/w", fault=False),
+                                  a2.tensor("params/w", fault=False))
+    a1.close()
+    a2.close()

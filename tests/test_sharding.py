@@ -1,0 +1,139 @@
+"""Sharding-rule derivation + HLO analyzer + compression unit tests."""
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.spec import TensorSpec, _partition_spec, tensor
+
+MESH = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16},
+                       axis_names=("pod", "data", "model"))
+
+RULES = {"heads": "model", "kv_heads": "model", "mlp": "model",
+         "vocab": "model", "embed": ("pod", "data"), "batch": ("pod", "data"),
+         "seq": "model", "layers": None}
+
+
+def test_partition_spec_basic():
+    s = tensor(8192, 64, 128, axes=("embed", "heads", "head_dim"))
+    p = _partition_spec(s, RULES, MESH)
+    assert p[0] == ("pod", "data") and p[1] == "model"
+
+
+def test_partition_spec_divisibility_fallback():
+    # kv_heads=8 cannot shard over model=16 -> replicated
+    s = tensor(80, 8, 128, axes=("layers", "kv_heads", "head_dim"))
+    p = _partition_spec(s, RULES, MESH)
+    assert all(e is None for e in p)
+
+
+def test_partition_spec_no_axis_reuse():
+    s = tensor(64, 128, axes=("heads", "seq"))  # both want "model"
+    p = _partition_spec(s, RULES, MESH)
+    assert p[0] == "model" and (len(p) < 2 or p[1] is None)
+
+
+def test_partition_spec_prefix_drop():
+    # dim 2 divisible by pod(2) but not pod*data(32): keep the prefix
+    s = tensor(2, 128, axes=("embed", None))
+    p = _partition_spec(s, RULES, MESH)
+    assert p[0] == "pod"
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(1, 4096))
+def test_partition_spec_always_divides(dim):
+    s = tensor(dim, axes=("embed",))
+    p = _partition_spec(s, RULES, MESH)
+    if p and p[0] is not None:
+        axes = p[0] if isinstance(p[0], tuple) else (p[0],)
+        prod = 1
+        for a in axes:
+            prod *= MESH.shape[a]
+        assert dim % prod == 0
+
+
+def test_batch_axes():
+    from repro.distributed.sharding import batch_axes
+    assert batch_axes(MESH, 256) == ("pod", "data")
+    assert batch_axes(MESH, 16) == ("data",)
+    assert batch_axes(MESH, 1) is None
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+FAKE_HLO = """
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %a = f32[8,128]{1,0} parameter(1)
+  %b = f32[128,8]{1,0} parameter(2)
+  %d = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[64,8]{1,0} all-gather(%d), replica_groups={}
+}
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %c = pred[] compare(%p, %p)
+}
+ENTRY %main.1 (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %w = (s32[], f32[8,8]) while(%x), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups={}
+}
+"""
+
+
+def test_analyze_hlo_loop_multipliers():
+    from repro.distributed.hlo_analysis import analyze_hlo
+    r = analyze_hlo(FAKE_HLO)
+    # dot: 2 * 64 * 128 flops, x10 trips
+    assert r["dot_flops_per_device"] == 2 * 64 * 128 * 10
+    # all-gather operand = 8*8*4 bytes x10; all-reduce = 8*8*4 once
+    assert r["collective_bytes_per_device"]["all-gather"] == 8 * 8 * 4 * 10
+    assert r["collective_bytes_per_device"]["all-reduce"] == 8 * 8 * 4
+    assert r["collective_count"]["all-gather"] == 10
+
+
+def test_roofline_terms():
+    from repro.distributed.hlo_analysis import HBM_BW, PEAK_FLOPS, Roofline
+    r = Roofline(flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2, coll_bytes=0,
+                 n_chips=4, model_flops=2 * PEAK_FLOPS)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.bottleneck == "compute"
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+def test_ef_quantize_bounded_error(seed, scale):
+    from repro.distributed.compress import ef_compress, dequantize_int8
+    g = jnp.asarray(np.random.default_rng(seed).standard_normal(64) * scale,
+                    jnp.float32)
+    e0 = jnp.zeros_like(g)
+    q, s, e1 = ef_compress(g, e0)
+    # residual bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(e1))) <= float(s) / 2 + 1e-6
+    np.testing.assert_allclose(np.asarray(dequantize_int8(q, s) + e1),
+                               np.asarray(g), rtol=1e-5, atol=1e-5)
+
+
+def test_ef_long_run_unbiased():
+    """Error feedback: accumulated updates converge to the true sum."""
+    from repro.distributed.compress import dequantize_int8, ef_compress
+    rng_ = np.random.default_rng(0)
+    g_true = jnp.asarray(rng_.standard_normal(32).astype(np.float32))
+    err = jnp.zeros_like(g_true)
+    acc = jnp.zeros_like(g_true)
+    for _ in range(200):
+        q, s, err = ef_compress(g_true, err)
+        acc = acc + dequantize_int8(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 200), np.asarray(g_true),
+                               atol=1e-2)
