@@ -9,11 +9,8 @@ anyway, buffered paths get a genuine cold cache).
 from __future__ import annotations
 
 import os
-import shutil
-import time
 
 import jax
-import numpy as np
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 STORE = os.path.join(ROOT, ".bench_store")

@@ -1,74 +1,111 @@
-"""Fig. 9: cold-start latency vs number of concurrently-arriving functions.
+"""Fig. 9: cold-start latency vs number of concurrently-arriving functions,
+driven through the concurrent data plane (serving/router.py).
 
-N independent functions cold-start at once; REAP should stay relatively
-flat (one big read each, I/O overlaps across instances) while the baseline
-degrades (serial 4 KB faults contend for the disk).  This container has a
-single CPU core, so the reproduction target is the *shape* of the curves.
+Two experiments per mode (vanilla | reap):
+
+  * ``distinct`` — N independent functions cold-start at once (the paper's
+    Fig. 9 shape): REAP stays relatively flat (one big read each, I/O
+    overlaps across instances) while the baseline degrades (serial 4 KB
+    faults contend for the disk).
+  * ``shared``   — N concurrent cold-starts of the *same* function: with the
+    shared WS page cache, N instances perform exactly one underlying
+    WS-file read (the "How Low Can You Go?" redundant-restore-I/O point).
+
+Each invocation routes through per-function queues + the worker pool, so
+the emitted reports carry queueing delay as a first-class segment.
+
+    PYTHONPATH=src python -m benchmarks.scalability [--quick] [--function f]
 """
 from __future__ import annotations
 
-import concurrent.futures as cf
-import os
+import argparse
 import time
 
 from . import common
 
 CONCURRENCY = (1, 2, 4, 8, 16)
+QUICK_CONCURRENCY = (1, 4, 16)
 
 
-def run(function: str = "olmo-1b", verbose=True):
-    from repro.core import (GuestMemoryFile, InstanceArena, ReapConfig,
-                            run_invocation)
-    from repro.core import reap as reap_mod
-    from repro.core.executor import warm_executables
-    from repro.core.snapshot import build_instance_snapshot
+def _fmt_row(label: str, reports, wall_s: float) -> tuple:
+    from repro.serving import summarize
+    s = summarize(reports)
+    derived = (f"wall={wall_s*1e3:.0f}ms "
+               f"queue_mean={s['queue_mean_s']*1e3:.1f}ms "
+               f"queue_p95={s['queue_p95_s']*1e3:.1f}ms "
+               f"e2e_p95={s['e2e_p95_s']*1e3:.1f}ms "
+               f"ws_hits={s['ws_cache_hits']}")
+    return (label, s["total_mean_s"] * 1e6, derived)
 
-    cfg = common.bench_functions()[function]
+
+def run(function: str = "olmo-1b", *, quick: bool = False, verbose=True):
+    from repro.configs import SMOKES
+    from repro.core.reap import WS_CACHE
+    from repro.serving import Orchestrator, Router, RouterConfig
+
+    conc = QUICK_CONCURRENCY if quick else CONCURRENCY
+    nmax = max(conc)
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
     store = common.ensure_store()
-    warm_executables(cfg, common.make_request(cfg, seed=1))
-    nmax = max(CONCURRENCY)
-    bases = []
-    for i in range(nmax):
-        b = os.path.join(store, f"scale_{function}_{i}")
-        if not os.path.exists(b + ".mem"):
-            build_instance_snapshot(cfg, b, seed=i, include_boot=False)
-        # record for REAP mode
-        if not reap_mod.has_record(b):
-            gm = GuestMemoryFile.open(b)
-            ar = InstanceArena(gm)
-            run_invocation(cfg, ar, common.make_request(cfg, seed=i))
-            reap_mod.write_record(b, ar.stats.trace)
-            ar.close()
-        bases.append(b)
-
-    def cold(base, mode, seed):
-        gm = GuestMemoryFile.open(base)
-        arena = InstanceArena(gm, o_direct=True)
-        t0 = time.perf_counter()
-        if mode == "reap":
-            reap_mod.prefetch(arena, base, ReapConfig())
-        run_invocation(cfg, arena, common.make_request(cfg, seed=seed))
-        dt = time.perf_counter() - t0
-        arena.close()
-        return dt
+    request = common.make_request(cfg, seed=1)
 
     rows = []
     for mode in ("vanilla", "reap"):
-        for n in CONCURRENCY:
-            common.drop_caches()
-            t0 = time.perf_counter()
-            with cf.ThreadPoolExecutor(n) as ex:
-                lats = list(ex.map(lambda i: cold(bases[i], mode, i), range(n)))
-            wall = time.perf_counter() - t0
-            mean = sum(lats) / n
-            rows.append((f"{mode}.n{n}", mean * 1e6,
-                         f"wall={wall*1e3:.0f}ms"))
-            if verbose:
-                print(f"  {mode:8s} n={n:2d}  mean={mean*1e3:7.1f}ms "
-                      f"wall={wall*1e3:7.1f}ms")
+        orch = Orchestrator(store, mode=mode, warm_limit=0)
+        prefix = "scaleq" if quick else "scale"
+        names = [f"{prefix}_{function}_{i}" for i in range(nmax)]
+        shared = f"{prefix}_{function}_shared"
+        for i, name in enumerate(names):
+            orch.register(name, cfg, seed=i,
+                          warmup_batch=request if i == 0 else None)
+        orch.register(shared, cfg, seed=nmax)
+        if mode == "reap":
+            # record phase: one invocation per function, then scale to zero
+            for name in names + [shared]:
+                orch.invoke(name, request)
+                orch.scale_to_zero(name)
+
+        for experiment in ("distinct", "shared"):
+            for n in conc:
+                common.drop_caches()
+                WS_CACHE.clear()
+                WS_CACHE.reset_stats()
+                router = Router(orch, RouterConfig(
+                    max_concurrency=n, max_instances_per_function=n))
+                targets = (names[:n] if experiment == "distinct"
+                           else [shared] * n)
+                t0 = time.perf_counter()
+                reports = [r for _, r in router.map(
+                    [(t, request) for t in targets], force_cold=True)]
+                wall = time.perf_counter() - t0
+                router.close()
+                for name in set(targets):
+                    orch.scale_to_zero(name)
+                label = f"{mode}.{experiment}.n{n}"
+                rows.append(_fmt_row(label, reports, wall))
+                if verbose:
+                    mean = sum(r.total_s for r in reports) / n
+                    q95 = sorted(r.queue_s for r in reports)[-1]
+                    print(f"  {mode:8s} {experiment:9s} n={n:2d} "
+                          f"mean={mean*1e3:7.1f}ms wall={wall*1e3:7.1f}ms "
+                          f"queue_max={q95*1e3:6.1f}ms "
+                          f"ws_reads={WS_CACHE.stats()['reads']}")
     common.write_rows("scalability", rows)
     return rows
 
 
+def main(argv=None):
+    from repro.configs import list_archs
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--function", default="olmo-1b")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: smoke config, capped concurrency")
+    args = ap.parse_args(argv)
+    if args.function not in list_archs():
+        ap.error(f"unknown --function {args.function!r}; "
+                 f"known: {', '.join(list_archs())}")
+    run(args.function, quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,6 +1,15 @@
 """Scenario: a multi-tenant worker serving ALL TEN assigned architectures
-as serverless functions with batched requests, keepalive-driven
-scale-to-zero, and REAP-accelerated cold starts.
+as serverless functions behind the concurrent data plane: per-function
+queues, a bounded worker pool, admission control, keepalive-driven
+scale-to-zero, REAP-accelerated cold starts, and a shared WS page cache.
+
+Phases:
+  1. deploy + record  -- every function cold-starts once (record phase)
+  2. scale to zero    -- the autoscaler reclaims all idle instances
+  3. trace replay     -- a replayable open-loop Poisson trace drives the
+                         router; cold starts hit the REAP prefetch path and
+                         concurrent restores of one function share one WS
+                         read through the process-wide cache
 
     PYTHONPATH=src python examples/serve_fleet.py
 """
@@ -14,8 +23,10 @@ import jax  # noqa: E402
 
 from repro.configs import ARCHS, SMOKES  # noqa: E402
 from repro.core import ReapConfig  # noqa: E402
+from repro.core.reap import WS_CACHE  # noqa: E402
 from repro.launch import steps  # noqa: E402
-from repro.serving import Orchestrator  # noqa: E402
+from repro.serving import (Orchestrator, Router, RouterConfig,  # noqa: E402
+                           poisson_trace, OpenLoopGenerator, summarize)
 
 
 def main():
@@ -30,23 +41,46 @@ def main():
         orch.register(name, cfg, warmup_batch=requests[name])
         print(f"deployed {name}")
 
-    # round 1: every function cold (record phase)
-    print("\n-- round 1: cold starts (record) --")
+    # phase 1: every function cold (record phase)
+    print("\n-- phase 1: cold starts (record) --")
     for name in ARCHS:
         _, r = orch.invoke(name, requests[name])
         print(f"  {name:28s} total={r.total_s*1e3:7.1f}ms faults={r.n_faults}")
 
-    # idle long enough for the autoscaler to reclaim everything
+    # phase 2: idle long enough for the autoscaler to reclaim everything
     time.sleep(2.2)
     n = orch.reap_idle()
     print(f"\nautoscaler reclaimed {n} idle instances (scale-to-zero)")
 
-    # round 2: cold again, now with REAP prefetch
-    print("\n-- round 2: cold starts (REAP prefetch) --")
-    for name in ARCHS:
-        _, r = orch.invoke(name, requests[name])
-        print(f"  {name:28s} total={r.total_s*1e3:7.1f}ms "
-              f"prefetch={r.prefetch_s*1e3:5.1f}ms faults={r.n_faults}")
+    # phase 3: replayable open-loop Poisson trace through the router.
+    # A skewed mix concentrates arrivals on a few functions so concurrent
+    # cold-starts of one function exercise the shared WS cache.
+    names = list(ARCHS)
+    mix = {n: (4.0 if i < 3 else 1.0) for i, n in enumerate(names)}
+    trace = poisson_trace(rate_rps=40.0, duration_s=1.0, functions=names,
+                          mix=mix, seed=7)
+    trace.save(os.path.join(store, "fleet_trace.json"))
+    print(f"\n-- phase 3: open-loop replay ({len(trace.events)} arrivals, "
+          f"{trace.duration_s:.2f}s trace) --")
+    WS_CACHE.reset_stats()
+    router = Router(orch, RouterConfig(max_concurrency=8,
+                                       max_instances_per_function=4))
+    gen = OpenLoopGenerator(router, trace,
+                            make_batch=lambda ev: requests[ev.function])
+    results = gen.run()
+    router.close()
+
+    reports = [rep for _, rep in results if rep is not None]
+    s = summarize(reports)
+    print(f"  served {s['n']}/{len(results)} "
+          f"queue_mean={s['queue_mean_s']*1e3:.1f}ms "
+          f"queue_p95={s['queue_p95_s']*1e3:.1f}ms "
+          f"e2e_p50={s['e2e_p50_s']*1e3:.1f}ms "
+          f"e2e_p95={s['e2e_p95_s']*1e3:.1f}ms")
+    cold = [r for r in reports if r.load_vmm_s > 0]
+    print(f"  cold starts: {len(cold)} "
+          f"(ws_cache_hits={s['ws_cache_hits']}) "
+          f"ws_cache={WS_CACHE.stats()}")
 
 
 if __name__ == "__main__":

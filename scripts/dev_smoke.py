@@ -1,10 +1,19 @@
+"""Forward-pass smoke over every assigned architecture (CI smoke job).
+
+Exits nonzero if any architecture fails, so CI can gate on it.
+"""
+import os
 import sys
-import jax, jax.numpy as jnp
-import numpy as np
-sys.path.insert(0, "/root/repo/src")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
 from repro.configs import SMOKES
 from repro.launch import steps
-from repro.nn import spec as nnspec
+from repro.training.optimizer import OptConfig
 
 failures = []
 for name, cfg in SMOKES.items():
@@ -16,10 +25,11 @@ for name, cfg in SMOKES.items():
         fwd = steps.build_forward(cfg)
         logits = fwd(params, batch)
         assert not bool(jnp.any(jnp.isnan(logits))), "NaN logits"
-        fam_loss = steps.build_train_step(cfg, __import__("repro.training.optimizer", fromlist=["OptConfig"]).OptConfig(), remat=False)
+        steps.build_train_step(cfg, OptConfig(), remat=False)
         print(f"[OK fwd] {name}: logits {logits.shape}")
     except Exception as e:
         import traceback; traceback.print_exc()
         failures.append((name, str(e)[:200]))
         print(f"[FAIL] {name}: {e}")
 print("FAILURES:", [f[0] for f in failures])
+sys.exit(1 if failures else 0)

@@ -7,5 +7,6 @@
 """
 from .arena import PAGE, ArenaLayout, GuestMemoryFile, InstanceArena, PageSource
 from .executor import run_invocation
-from .reap import ColdStartReport, Monitor, ReapConfig, has_record, prefetch, write_record
+from .reap import (WS_CACHE, ColdStartReport, Monitor, ReapConfig, WSCache,
+                   has_record, prefetch, prefetch_shared, write_record)
 from .snapshot import booted_footprint_bytes, build_instance_snapshot

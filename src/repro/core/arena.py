@@ -215,28 +215,35 @@ class InstanceArena:
         self.resident = np.zeros(self.layout.n_pages, dtype=bool)
         self.stats = FaultStats()
         self.source = PageSource(gm.mem_path, o_direct=o_direct)
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
+        self._closed = False
 
     # -- fault paths --------------------------------------------------------
 
     def touch_pages(self, pages: Iterable[int], *, parallel: int = 0) -> int:
-        """Ensure pages are resident; returns number of faults served."""
-        missing = [p for p in pages if not self.resident[p]]
-        if not missing:
-            return 0
-        t0 = time.perf_counter()
-        if parallel > 1:
-            self._fault_parallel(missing, parallel)
-        else:
-            for p in missing:
-                self.source.read_page(
-                    p, self.view[p * PAGE:(p + 1) * PAGE])
-                self.resident[p] = True
-        self.stats.fault_seconds += time.perf_counter() - t0
-        self.stats.n_faults += len(missing)
-        self.stats.n_pages_installed += len(missing)
-        self.stats.trace.extend(missing)
-        return len(missing)
+        """Ensure pages are resident; returns number of faults served.
+
+        Thread-safe: the residence check, page install, and stats update are
+        one atomic step, so concurrent fault paths (e.g. ``make_warm`` racing
+        a monitor) never double-install or corrupt the trace.
+        """
+        with self._lock:
+            missing = [p for p in pages if not self.resident[p]]
+            if not missing:
+                return 0
+            t0 = time.perf_counter()
+            if parallel > 1:
+                self._fault_parallel(missing, parallel)
+            else:
+                for p in missing:
+                    self.source.read_page(
+                        p, self.view[p * PAGE:(p + 1) * PAGE])
+                    self.resident[p] = True
+            self.stats.fault_seconds += time.perf_counter() - t0
+            self.stats.n_faults += len(missing)
+            self.stats.n_pages_installed += len(missing)
+            self.stats.trace.extend(missing)
+            return len(missing)
 
     def _fault_parallel(self, pages: list[int], workers: int) -> None:
         import concurrent.futures as cf
@@ -257,12 +264,13 @@ class InstanceArena:
 
     def install_span(self, page_indices: Sequence[int], data: bytes) -> None:
         """Eagerly install prefetched page contents (REAP prefetch phase)."""
-        mv = memoryview(data)
-        for i, p in enumerate(page_indices):
-            if not self.resident[p]:
-                self.view[p * PAGE:(p + 1) * PAGE] = mv[i * PAGE:(i + 1) * PAGE]
-                self.resident[p] = True
-        self.stats.n_pages_installed += len(page_indices)
+        with self._lock:
+            mv = memoryview(data)
+            for i, p in enumerate(page_indices):
+                if not self.resident[p]:
+                    self.view[p * PAGE:(p + 1) * PAGE] = mv[i * PAGE:(i + 1) * PAGE]
+                    self.resident[p] = True
+            self.stats.n_pages_installed += len(page_indices)
 
     # -- tensor access ------------------------------------------------------
 
@@ -288,11 +296,15 @@ class InstanceArena:
         return int(self.resident.sum()) * PAGE
 
     def close(self):
-        self.source.close()
-        self.view.release()
-        try:
-            self.buf.close()
-        except BufferError:
-            # zero-copy jnp/np views may still alias the mmap; the OS frees
-            # it when the last reference dies.
-            pass
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self.source.close()
+            self.view.release()
+            try:
+                self.buf.close()
+            except BufferError:
+                # zero-copy jnp/np views may still alias the mmap; the OS frees
+                # it when the last reference dies.
+                pass

@@ -15,8 +15,6 @@ Arena regions (DESIGN.md §3):
 """
 from __future__ import annotations
 
-import os
-
 import numpy as np
 
 from ..configs.base import ModelConfig

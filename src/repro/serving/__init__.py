@@ -1,2 +1,6 @@
 from .instance import ExecutableCache, FunctionInstance, State
-from .orchestrator import Orchestrator
+from .loadgen import (ClosedLoopGenerator, OpenLoopGenerator, Trace,
+                      TraceEvent, poisson_trace, uniform_trace)
+from .orchestrator import FunctionRecord, Orchestrator
+from .router import (AdmissionError, Invocation, Router, RouterConfig,
+                     percentile, summarize)

@@ -17,14 +17,13 @@ Cold-start latency is split exactly as the paper measures it (§4.2):
 from __future__ import annotations
 
 import enum
+import itertools
 import socket
+import threading
 import time
-from typing import Any
-
-import jax
 
 from ..configs.base import ModelConfig
-from ..core import (GuestMemoryFile, Monitor, ReapConfig, run_invocation)
+from ..core import GuestMemoryFile, Monitor, ReapConfig, run_invocation
 from ..core.reap import ColdStartReport
 from ..models import get_family
 from ..nn import spec as nnspec
@@ -70,13 +69,23 @@ def _handshake() -> float:
 
 
 class FunctionInstance:
-    """One sandboxed instance of a function (cfg), restored from snapshot."""
+    """One sandboxed instance of a function (cfg), restored from snapshot.
+
+    State transitions are lock-guarded so the router's worker pool, the
+    keepalive reaper, and scale-to-zero can race safely: an instance is
+    dispatched only via :meth:`try_acquire` (IDLE -> BUSY) and reclaimed
+    only via :meth:`try_reclaim`, which refuses BUSY instances.
+    """
+
+    _ids = itertools.count()
 
     def __init__(self, name: str, cfg: ModelConfig, base: str,
                  reap: ReapConfig, *, mode: str = "auto"):
         self.name = name
         self.cfg = cfg
         self.base = base
+        self.instance_id = next(FunctionInstance._ids)
+        self._state_lock = threading.Lock()
         self.state = State.LOADING
         self.report = ColdStartReport()
         self.last_used = time.monotonic()
@@ -85,16 +94,7 @@ class FunctionInstance:
         self.gm = GuestMemoryFile.open(base)
         if mode == "vanilla":
             # baseline: ignore any WS record; always lazy page faults
-            from ..core import reap as reap_mod
-            self.monitor = Monitor.__new__(Monitor)
-            self.monitor.gm = self.gm
-            self.monitor.base = base
-            self.monitor.cfg = reap
-            from ..core.arena import InstanceArena
-            self.monitor.arena = InstanceArena(self.gm, o_direct=reap.o_direct)
-            self.monitor.mode = "vanilla"
-            self.monitor.prefetched = 0
-            self.monitor.prefetch_s = 0.0
+            self.monitor = Monitor(self.gm, base, reap, mode="vanilla")
         else:
             self.monitor = Monitor(self.gm, base, reap)
         ExecutableCache.get(cfg)
@@ -104,16 +104,43 @@ class FunctionInstance:
         self.monitor.start()
         self.report.prefetch_s = self.monitor.prefetch_s
         self.report.n_prefetched_pages = self.monitor.prefetched
+        self.report.ws_cache_hit = self.monitor.ws_cache_hit
         self.state = State.IDLE
         self._warm_params = None
         self._n_invocations = 0
+
+    # -- state machine -------------------------------------------------
+
+    def try_acquire(self) -> bool:
+        """IDLE -> BUSY; False if the instance is not dispatchable."""
+        with self._state_lock:
+            if self.state is not State.IDLE:
+                return False
+            self.state = State.BUSY
+            return True
+
+    def release(self) -> None:
+        """BUSY -> IDLE (after an invocation completes)."""
+        with self._state_lock:
+            if self.state is State.BUSY:
+                self.state = State.IDLE
+            self.last_used = time.monotonic()
+
+    def try_reclaim(self) -> bool:
+        """IDLE -> RECLAIMED; never tears down a BUSY instance."""
+        with self._state_lock:
+            if self.state is not State.IDLE:
+                return False
+            self.state = State.RECLAIMED
+        self.monitor.arena.close()
+        self._warm_params = None
+        return True
 
     # ------------------------------------------------------------------
 
     def invoke(self, batch: dict, *, parallel_faults: int = 0):
         """Process one invocation; first call is cold, later calls warm."""
         import dataclasses as _dc
-        self.state = State.BUSY
         stats = self.monitor.arena.stats
         f0, fs0 = stats.n_faults, stats.fault_seconds
         t0 = time.perf_counter()
@@ -135,11 +162,11 @@ class FunctionInstance:
             connection_s=self.report.connection_s if first else 0.0,
             prefetch_s=self.report.prefetch_s if first else 0.0,
             n_prefetched_pages=self.report.n_prefetched_pages if first else 0,
+            ws_cache_hit=self.report.ws_cache_hit if first else False,
             processing_s=dt,
             fault_s=stats.fault_seconds - fs0,
             n_faults=stats.n_faults - f0,
         )
-        self.state = State.IDLE
         self.last_used = time.monotonic()
         return logits, dt
 
@@ -165,6 +192,9 @@ class FunctionInstance:
         return self.monitor.finish()
 
     def reclaim(self):
-        self.state = State.RECLAIMED
+        """Unconditional teardown (caller must know the instance is not
+        mid-invocation); prefer :meth:`try_reclaim` on shared paths."""
+        with self._state_lock:
+            self.state = State.RECLAIMED
         self.monitor.arena.close()
         self._warm_params = None

@@ -1,0 +1,199 @@
+"""Trace-driven load generation for the concurrent data plane.
+
+Workload model (SPES-style: provisioning policy must react to arrival
+patterns, so arrivals must be *replayable*):
+
+  * A :class:`Trace` is an ordered list of :class:`TraceEvent`s — arrival
+    offset, function name, modality, per-event seed.  Traces serialize to
+    JSON so a workload can be saved, diffed, and replayed bit-identically.
+  * :func:`poisson_trace` synthesizes an **open-loop** arrival process
+    (exponential inter-arrivals at ``rate_rps``) over a weighted function
+    mix and modality mix, from a seed.
+  * :func:`uniform_trace` synthesizes a deterministic fixed-interval trace
+    (``interval_s=0`` => an N-wide concurrent burst, the Fig. 9 shape).
+  * :class:`OpenLoopGenerator` replays a trace against a router at wall
+    pace: submits happen at each event's offset whether or not earlier
+    invocations finished (queueing delay is *measured*, not avoided).
+  * :class:`ClosedLoopGenerator` runs N client loops (submit, wait, think)
+    — the throughput-oriented counterpart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from ..core.reap import ColdStartReport
+from .router import AdmissionError, Router
+
+MODALITIES = ("text", "vision", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    t: float                 # arrival offset from trace start, seconds
+    function: str
+    modality: str = "text"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Trace:
+    events: list[TraceEvent]
+
+    @property
+    def duration_s(self) -> float:
+        return self.events[-1].t if self.events else 0.0
+
+    @property
+    def functions(self) -> list[str]:
+        return sorted({e.function for e in self.events})
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"version": 1,
+                       "events": [dataclasses.asdict(e) for e in self.events]},
+                      f, indent=None)
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            d = json.load(f)
+        return cls([TraceEvent(**e) for e in d["events"]])
+
+
+def _normalize_mix(names: list[str], mix: dict[str, float] | None) -> np.ndarray:
+    w = np.asarray([1.0 if mix is None else float(mix.get(n, 0.0))
+                    for n in names])
+    if w.sum() <= 0:
+        raise ValueError("function mix has no mass")
+    return w / w.sum()
+
+
+def poisson_trace(rate_rps: float, duration_s: float, functions: list[str], *,
+                  mix: dict[str, float] | None = None,
+                  modality_mix: dict[str, float] | None = None,
+                  seed: int = 0) -> Trace:
+    """Open-loop Poisson arrivals over a weighted multi-function mix."""
+    rng = np.random.default_rng(seed)
+    probs = _normalize_mix(functions, mix)
+    mod_names = list(MODALITIES)
+    mod_probs = _normalize_mix(mod_names, modality_mix or {"text": 1.0})
+    events: list[TraceEvent] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_rps))
+        if t > duration_s:
+            break
+        events.append(TraceEvent(
+            t=t,
+            function=functions[int(rng.choice(len(functions), p=probs))],
+            modality=mod_names[int(rng.choice(len(mod_names), p=mod_probs))],
+            seed=int(rng.integers(0, 2**31)),
+        ))
+    return Trace(events)
+
+
+def uniform_trace(n: int, interval_s: float, functions: list[str], *,
+                  seed: int = 0) -> Trace:
+    """Deterministic arrivals every ``interval_s``; ``interval_s=0`` is an
+    N-wide concurrent burst round-robined over ``functions``."""
+    return Trace([TraceEvent(t=i * interval_s,
+                             function=functions[i % len(functions)],
+                             seed=seed + i)
+                  for i in range(n)])
+
+
+#: Maps one trace event to a request payload for its function.
+BatchFactory = Callable[[TraceEvent], dict]
+
+
+class OpenLoopGenerator:
+    """Replay a trace against a router at wall-clock pace.
+
+    ``speedup`` compresses the timeline (2.0 => replay twice as fast);
+    submits are never delayed by completions — that is the point of
+    open-loop load (queueing delay shows up in ``report.queue_s``).
+    """
+
+    def __init__(self, router: Router, trace: Trace,
+                 make_batch: BatchFactory, *, speedup: float = 1.0):
+        self.router = router
+        self.trace = trace
+        self.make_batch = make_batch
+        self.speedup = speedup
+
+    def run(self) -> list[tuple[TraceEvent, ColdStartReport | None]]:
+        """Returns (event, report) per event; report None when rejected."""
+        pending: list[tuple[TraceEvent, object]] = []
+        rejected: list[TraceEvent] = []
+        t0 = time.perf_counter()
+        for ev in self.trace.events:
+            target = ev.t / self.speedup
+            delay = target - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                pending.append(
+                    (ev, self.router.submit(ev.function, self.make_batch(ev))))
+            except AdmissionError:
+                rejected.append(ev)
+        out: list[tuple[TraceEvent, ColdStartReport | None]] = []
+        for ev, inv in pending:
+            out.append((ev, inv.result()[1]))
+        out.extend((ev, None) for ev in rejected)
+        return out
+
+
+class ClosedLoopGenerator:
+    """N concurrent clients, each looping submit -> wait -> think."""
+
+    def __init__(self, router: Router, trace: Trace, make_batch: BatchFactory,
+                 *, n_clients: int = 4, think_time_s: float = 0.0):
+        self.router = router
+        self.trace = trace
+        self.make_batch = make_batch
+        self.n_clients = n_clients
+        self.think_time_s = think_time_s
+
+    def run(self) -> list[tuple[TraceEvent, ColdStartReport]]:
+        events = list(self.trace.events)
+        out: list[tuple[TraceEvent, ColdStartReport]] = []
+        errors: list[BaseException] = []
+        out_lock = threading.Lock()
+        it_lock = threading.Lock()
+        idx = [0]
+
+        def client() -> None:
+            while True:
+                with it_lock:
+                    if idx[0] >= len(events):
+                        return
+                    ev = events[idx[0]]
+                    idx[0] += 1
+                try:
+                    _, rep = self.router.invoke(ev.function,
+                                                self.make_batch(ev))
+                except BaseException as e:
+                    with out_lock:
+                        errors.append(e)
+                    continue
+                with out_lock:
+                    out.append((ev, rep))
+                if self.think_time_s:
+                    time.sleep(self.think_time_s)
+
+        threads = [threading.Thread(target=client, name=f"client-{i}",
+                                    daemon=True)
+                   for i in range(self.n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]  # partial results must not masquerade as a run
+        return out

@@ -1,10 +1,17 @@
 """vHive-CRI orchestrator analogue: function registry, instance pool,
-router/data-plane, autoscaler-lite with keepalive + scale-to-zero.
+autoscaler-lite with keepalive + scale-to-zero.
 
 The orchestrator owns the snapshot store and the per-function REAP records.
 Per the paper's AWS-Lambda model, one instance processes one invocation at
 a time; concurrent invocations of the same function spawn additional
 instances (Fig. 9's scalability experiment drives exactly this path).
+
+Every public method is thread-safe: the router's worker pool (router.py)
+calls :meth:`invoke` from many threads while the keepalive reaper runs
+concurrently.  Instances move IDLE -> BUSY only via
+``FunctionInstance.try_acquire`` and are torn down only via
+``try_reclaim``, which refuses BUSY instances — so a reaper racing an
+invocation can never pull the arena out from under it.
 """
 from __future__ import annotations
 
@@ -15,11 +22,17 @@ from typing import Any
 
 from ..configs.base import ModelConfig
 from ..core import ReapConfig, build_instance_snapshot
-from ..core.reap import ColdStartReport, drop_record, has_record
-from .instance import FunctionInstance, State
+from ..core.reap import ColdStartReport, drop_record
+from .instance import FunctionInstance
 
 
 class FunctionRecord:
+    """Per-function state: snapshot base, warm pool, invocation stats.
+
+    ``lock`` guards ``idle`` and ``stats``; ``n_spawned`` / ``n_invocations``
+    are monotone counters updated under the same lock.
+    """
+
     def __init__(self, name: str, cfg: ModelConfig, base: str):
         self.name = name
         self.cfg = cfg
@@ -27,6 +40,8 @@ class FunctionRecord:
         self.lock = threading.Lock()
         self.idle: list[FunctionInstance] = []
         self.stats: list[ColdStartReport] = []
+        self.n_spawned = 0
+        self.n_invocations = 0
 
 
 class Orchestrator:
@@ -71,20 +86,25 @@ class Orchestrator:
     def scale_to_zero(self, name: str) -> None:
         rec = self.functions[name]
         with rec.lock:
-            for inst in rec.idle:
-                inst.reclaim()
-            rec.idle.clear()
+            keep = [i for i in rec.idle if not i.try_reclaim()]
+            rec.idle = keep
 
     def reap_idle(self) -> int:
-        """Keepalive sweep: reclaim instances idle past the deadline."""
+        """Keepalive sweep: reclaim instances idle past the deadline.
+
+        Safe to run concurrently with ``invoke``: an instance that a worker
+        just acquired is BUSY and ``try_reclaim`` refuses it.
+        """
         now = time.monotonic()
         n = 0
-        for rec in self.functions.values():
+        with self._lock:
+            records = list(self.functions.values())
+        for rec in records:
             with rec.lock:
                 keep = []
                 for inst in rec.idle:
-                    if now - inst.last_used > self.keepalive_s:
-                        inst.reclaim()
+                    if (now - inst.last_used > self.keepalive_s
+                            and inst.try_reclaim()):
                         n += 1
                     else:
                         keep.append(inst)
@@ -93,30 +113,53 @@ class Orchestrator:
 
     # -- data plane ------------------------------------------------------
 
+    def _acquire_instance(self, rec: FunctionRecord,
+                          force_cold: bool) -> tuple[FunctionInstance, bool]:
+        """Pop a warm instance (atomically marking it BUSY) or cold-start a
+        new one.  Returns (instance, was_cold)."""
+        if not force_cold:
+            with rec.lock:
+                while rec.idle:
+                    inst = rec.idle.pop()
+                    if inst.try_acquire():
+                        return inst, False
+                    # lost a race with a reaper; instance is already dead
+        mode = "vanilla" if self.mode == "vanilla" else "auto"
+        inst = FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
+                                mode=mode)
+        inst.try_acquire()
+        with rec.lock:
+            rec.n_spawned += 1
+        return inst, True
+
+    def _release_instance(self, rec: FunctionRecord, inst: FunctionInstance,
+                          report: ColdStartReport) -> None:
+        inst.release()
+        with rec.lock:
+            rec.stats.append(report)
+            rec.n_invocations += 1
+            if len(rec.idle) < self.warm_limit:
+                rec.idle.append(inst)
+                return
+        inst.try_reclaim()
+
     def invoke(self, name: str, batch: dict,
                *, force_cold: bool = False) -> tuple[Any, ColdStartReport]:
         """Route one invocation; cold-starts a new instance if needed."""
         rec = self.functions[name]
-        inst: FunctionInstance | None = None
-        if not force_cold:
-            with rec.lock:
-                if rec.idle:
-                    inst = rec.idle.pop()
-        cold = inst is None
-        if cold:
-            mode = "vanilla" if self.mode == "vanilla" else "auto"
-            inst = FunctionInstance(name, rec.cfg, rec.base, self.reap,
-                                    mode=mode)
-        logits, _ = inst.invoke(
-            batch, parallel_faults=self.reap.parallel_faults)
-        if cold:
-            inst.finish_cold()
-            inst.make_warm()  # instance stays memory-resident until reclaimed
+        inst, cold = self._acquire_instance(rec, force_cold)
+        try:
+            logits, _ = inst.invoke(
+                batch, parallel_faults=self.reap.parallel_faults)
+            if cold:
+                inst.finish_cold()
+                inst.make_warm()  # stays memory-resident until reclaimed
+        except BaseException:
+            # failed invocation: never return the instance to the warm pool,
+            # and never leak its arena mmap
+            inst.release()
+            inst.try_reclaim()
+            raise
         report = inst.report
-        with rec.lock:
-            rec.stats.append(report)
-            if len(rec.idle) < self.warm_limit:
-                rec.idle.append(inst)
-            else:
-                inst.reclaim()
+        self._release_instance(rec, inst, report)
         return logits, report

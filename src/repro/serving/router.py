@@ -1,0 +1,245 @@
+"""Concurrent serving data plane: per-function queues + a worker pool.
+
+The paper's scalability experiment (Fig. 9) drives many *concurrent*
+cold-starts; this router is the data plane that makes such load runnable
+in-process.  Architecture:
+
+  * **Per-function FIFO queues** — invocations of one function are ordered;
+    functions are dispatched round-robin for fairness.
+  * **Worker pool** — ``max_concurrency`` threads execute invocations
+    against the orchestrator.  Page-fault and WS-read I/O release the GIL,
+    so cold-start I/O genuinely overlaps across workers.
+  * **Admission control** — the AWS-Lambda one-invocation-per-instance
+    model (orchestrator.py): a function with fewer than
+    ``max_instances_per_function`` in-flight invocations may *spawn* (or
+    reuse) an instance; beyond that, arrivals *queue*.  A queue longer than
+    ``queue_depth`` rejects the submit (the 429/throttle analogue).
+
+Every accepted invocation resolves to an :class:`Invocation` future whose
+report carries the queueing delay (``report.queue_s``) as a first-class
+timing segment next to the paper's load/connect/prefetch/processing split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any
+
+from ..core.reap import ColdStartReport
+from .orchestrator import Orchestrator
+
+
+class AdmissionError(RuntimeError):
+    """Submit rejected: the per-function queue is at ``queue_depth``."""
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    max_concurrency: int = 8            # worker-pool size (global)
+    max_instances_per_function: int = 8  # queue-or-spawn threshold
+    queue_depth: int = 1024             # per-function backlog bound
+
+
+class Invocation:
+    """Future for one accepted invocation."""
+
+    def __init__(self, name: str, batch: dict, force_cold: bool):
+        self.name = name
+        self.batch = batch
+        self.force_cold = force_cold
+        self.t_submit = time.perf_counter()
+        self.queue_s = 0.0
+        self._done = threading.Event()
+        self._output: Any = None
+        self._report: ColdStartReport | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None) -> tuple[Any, ColdStartReport]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"invocation of {self.name!r} still pending")
+        if self._error is not None:
+            raise self._error
+        return self._output, self._report
+
+    @property
+    def report(self) -> ColdStartReport:
+        return self.result()[1]
+
+    def _resolve(self, output: Any, report: ColdStartReport) -> None:
+        self._output, self._report = output, report
+        self._done.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._done.set()
+
+
+class Router:
+    """Dispatches queued invocations onto a bounded worker pool.
+
+    ``start=False`` builds the router paused (submits enqueue only) — used
+    by tests and by the load generator to stage a burst, then ``start()``.
+    """
+
+    def __init__(self, orch: Orchestrator, cfg: RouterConfig | None = None,
+                 *, start: bool = True):
+        self.orch = orch
+        self.cfg = cfg or RouterConfig()
+        self._cv = threading.Condition()
+        self._queues: dict[str, deque[Invocation]] = {}
+        self._rr: deque[str] = deque()     # round-robin function order
+        self._inflight: dict[str, int] = {}
+        self._closed = False
+        self._started = False
+        self._workers: list[threading.Thread] = []
+        self.completed = 0
+        self.rejected = 0
+        if start:
+            self.start()
+
+    # -- client API ----------------------------------------------------
+
+    def submit(self, name: str, batch: dict, *,
+               force_cold: bool = False) -> Invocation:
+        """Enqueue one invocation; returns its future.
+
+        Raises :class:`AdmissionError` when the function's backlog is full.
+        """
+        inv = Invocation(name, batch, force_cold)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("router is closed")
+            q = self._queues.get(name)
+            if q is None:
+                q = self._queues[name] = deque()
+                self._rr.append(name)
+                self._inflight.setdefault(name, 0)
+            if len(q) >= self.cfg.queue_depth:
+                self.rejected += 1
+                raise AdmissionError(
+                    f"{name}: queue depth {self.cfg.queue_depth} exceeded")
+            q.append(inv)
+            self._cv.notify()
+        return inv
+
+    def invoke(self, name: str, batch: dict, *, force_cold: bool = False,
+               timeout: float | None = None) -> tuple[Any, ColdStartReport]:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(name, batch, force_cold=force_cold).result(timeout)
+
+    def map(self, items: list[tuple[str, dict]],
+            *, force_cold: bool = False) -> list[tuple[Any, ColdStartReport]]:
+        """Submit a batch of (function, request) pairs; wait for all."""
+        invs = [self.submit(n, b, force_cold=force_cold) for n, b in items]
+        return [inv.result() for inv in invs]
+
+    def start(self) -> None:
+        with self._cv:
+            if self._started or self._closed:
+                return
+            self._started = True
+            for i in range(self.cfg.max_concurrency):
+                t = threading.Thread(target=self._worker_loop,
+                                     name=f"router-worker-{i}", daemon=True)
+                self._workers.append(t)
+                t.start()
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every accepted invocation has resolved."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cv:
+            while (any(self._queues.values())
+                   or any(self._inflight.values())):
+                left = None if deadline is None else deadline - time.perf_counter()
+                if left is not None and left <= 0:
+                    raise TimeoutError("router drain timed out")
+                self._cv.wait(timeout=left)
+
+    def close(self, *, drain: bool = True) -> None:
+        if drain and self._started:
+            self.drain()
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        for t in self._workers:
+            t.join(timeout=5.0)
+
+    def stats(self) -> dict:
+        with self._cv:
+            return {
+                "queued": {n: len(q) for n, q in self._queues.items() if q},
+                "inflight": {n: c for n, c in self._inflight.items() if c},
+                "completed": self.completed,
+                "rejected": self.rejected,
+            }
+
+    def __enter__(self) -> "Router":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -- worker pool ---------------------------------------------------
+
+    def _next_locked(self) -> Invocation | None:
+        """Pick the next dispatchable invocation (round-robin across
+        functions); called with ``_cv`` held."""
+        for _ in range(len(self._rr)):
+            name = self._rr[0]
+            self._rr.rotate(-1)
+            q = self._queues[name]
+            if q and self._inflight[name] < self.cfg.max_instances_per_function:
+                self._inflight[name] += 1
+                return q.popleft()
+        return None
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                inv = self._next_locked()
+                while inv is None and not self._closed:
+                    self._cv.wait()
+                    inv = self._next_locked()
+                if inv is None:      # closed and nothing dispatchable
+                    return
+            inv.queue_s = time.perf_counter() - inv.t_submit
+            try:
+                out, rep = self.orch.invoke(inv.name, inv.batch,
+                                            force_cold=inv.force_cold)
+                rep = dataclasses.replace(rep, queue_s=inv.queue_s)
+                inv._resolve(out, rep)
+            except BaseException as e:  # propagate to the waiter, keep serving
+                inv._fail(e)
+            finally:
+                with self._cv:
+                    self._inflight[inv.name] -= 1
+                    self.completed += 1
+                    self._cv.notify_all()
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile of ``xs`` (q in [0, 100])."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+def summarize(reports: list[ColdStartReport]) -> dict:
+    """Latency summary of a batch of per-invocation reports."""
+    e2e = [r.e2e_s for r in reports]
+    return {
+        "n": len(reports),
+        "queue_mean_s": sum(r.queue_s for r in reports) / max(len(reports), 1),
+        "queue_p95_s": percentile([r.queue_s for r in reports], 95),
+        "total_mean_s": sum(r.total_s for r in reports) / max(len(reports), 1),
+        "e2e_p50_s": percentile(e2e, 50),
+        "e2e_p95_s": percentile(e2e, 95),
+        "ws_cache_hits": sum(1 for r in reports if r.ws_cache_hit),
+    }

@@ -1,10 +1,9 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)
 plus hypothesis property tests on the scan kernels' state-passing."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 rng = np.random.default_rng(42)
 

@@ -5,7 +5,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 from repro.core.arena import (PAGE, ArenaLayout, GuestMemoryFile,
                               InstanceArena)

@@ -1,0 +1,192 @@
+"""Concurrent data plane: router, shared WS cache, loadgen, reaper races."""
+import threading
+
+import jax
+import pytest
+
+from repro.configs import SMOKES
+from repro.core import ReapConfig
+from repro.core.reap import WS_CACHE
+from repro.launch import steps
+from repro.serving import (AdmissionError, Orchestrator, Router, RouterConfig,
+                           State, Trace, ClosedLoopGenerator,
+                           OpenLoopGenerator, poisson_trace, uniform_trace)
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One registered+recorded function on a module-scoped orchestrator."""
+    store = str(tmp_path_factory.mktemp("rstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 32, 2, "train", jax.random.key(0))
+    orch = Orchestrator(store, mode="reap", reap=ReapConfig())
+    orch.register("fn", cfg, warmup_batch=batch)
+    orch.invoke("fn", batch)          # record phase
+    orch.scale_to_zero("fn")
+    return orch, batch
+
+
+def test_concurrent_cold_starts_share_one_ws_read(served):
+    """N concurrent cold-starts => N distinct instances, one WS-file read."""
+    orch, batch = served
+    WS_CACHE.clear()
+    WS_CACHE.reset_stats()
+    n = 6
+    spawned0 = orch.functions["fn"].n_spawned
+    router = Router(orch, RouterConfig(max_concurrency=n,
+                                       max_instances_per_function=n))
+    results = router.map([("fn", batch)] * n, force_cold=True)
+    router.close()
+
+    reports = [r for _, r in results]
+    assert len(reports) == n
+    assert orch.functions["fn"].n_spawned - spawned0 == n  # distinct instances
+    for r in reports:
+        assert r.load_vmm_s > 0          # all cold
+        assert r.n_prefetched_pages > 0  # all took the REAP prefetch path
+        assert r.queue_s >= 0
+    # the headline property: one underlying read, everyone else hits
+    s = WS_CACHE.stats()
+    assert s["reads"] == 1
+    assert s["hits"] == n - 1
+    assert sum(r.ws_cache_hit for r in reports) == n - 1
+    orch.scale_to_zero("fn")
+
+
+def test_rerecord_invalidates_ws_cache(served):
+    orch, batch = served
+    WS_CACHE.clear()
+    WS_CACHE.reset_stats()
+    _, r1 = orch.invoke("fn", batch, force_cold=True)   # populates cache
+    assert WS_CACHE.stats()["reads"] == 1
+    _, r2 = orch.invoke("fn", batch, force_cold=True)   # served from cache
+    assert r2.ws_cache_hit and WS_CACHE.stats()["reads"] == 1
+
+    orch.reset_records("fn")                             # drop_record
+    assert WS_CACHE.stats()["entries"] == 0
+    _, r3 = orch.invoke("fn", batch, force_cold=True)   # re-records
+    assert r3.n_prefetched_pages == 0                    # record phase again
+    _, r4 = orch.invoke("fn", batch, force_cold=True)   # fresh WS, fresh read
+    assert r4.n_prefetched_pages > 0 and not r4.ws_cache_hit
+    assert WS_CACHE.stats()["reads"] == 2
+    orch.scale_to_zero("fn")
+
+
+def test_reaper_never_reclaims_busy_instance(served):
+    """A keepalive sweep racing in-flight invocations must only ever
+    reclaim IDLE instances, and every invocation must still succeed."""
+    orch, batch = served
+    orch_keepalive = orch.keepalive_s
+    orch.keepalive_s = 0.0               # everything idle is reclaimable
+    stop = threading.Event()
+    reaped = []
+
+    def reaper():
+        while not stop.is_set():
+            reaped.append(orch.reap_idle())
+
+    t = threading.Thread(target=reaper, daemon=True)
+    t.start()
+    try:
+        router = Router(orch, RouterConfig(max_concurrency=4,
+                                           max_instances_per_function=4))
+        results = router.map([("fn", batch)] * 12)
+        router.close()
+    finally:
+        stop.set()
+        t.join(timeout=5)
+        orch.keepalive_s = orch_keepalive
+    assert len(results) == 12            # no invocation died under the race
+    assert all(rep.processing_s > 0 for _, rep in results)
+    orch.scale_to_zero("fn")
+
+
+def test_try_reclaim_refuses_busy():
+    """Direct state-machine check, no snapshot I/O needed."""
+    from repro.serving import FunctionInstance
+    inst = FunctionInstance.__new__(FunctionInstance)
+    inst._state_lock = threading.Lock()
+    inst.state = State.IDLE
+    inst.last_used = 0.0
+    assert inst.try_acquire()            # IDLE -> BUSY
+    assert not inst.try_acquire()        # BUSY is exclusive
+    assert not inst.try_reclaim()        # never reclaim a BUSY instance
+    inst.release()
+    assert inst.state is State.IDLE
+
+
+def test_admission_control_and_queueing_delay(served):
+    orch, batch = served
+    router = Router(orch, RouterConfig(max_concurrency=1,
+                                       max_instances_per_function=1,
+                                       queue_depth=2), start=False)
+    accepted = [router.submit("fn", batch) for _ in range(2)]
+    with pytest.raises(AdmissionError):
+        router.submit("fn", batch)       # backlog full => throttled
+    assert router.stats()["rejected"] == 1
+
+    router.start()                        # drain the staged burst
+    reports = [inv.result(timeout=120)[1] for inv in accepted]
+    router.close()
+    # serial worker => the second invocation observed real queueing delay
+    assert reports[1].queue_s > 0
+    assert reports[1].e2e_s >= reports[1].total_s
+    orch.scale_to_zero("fn")
+
+
+def test_trace_roundtrip_and_determinism(tmp_path):
+    tr1 = poisson_trace(rate_rps=50, duration_s=2.0,
+                        functions=["a", "b"], mix={"a": 3, "b": 1},
+                        modality_mix={"text": 1, "vision": 1}, seed=42)
+    tr2 = poisson_trace(rate_rps=50, duration_s=2.0,
+                        functions=["a", "b"], mix={"a": 3, "b": 1},
+                        modality_mix={"text": 1, "vision": 1}, seed=42)
+    assert tr1.events == tr2.events      # replayable: same seed, same trace
+    assert len(tr1.events) > 10
+    assert set(e.function for e in tr1.events) == {"a", "b"}
+    assert all(tr1.events[i].t <= tr1.events[i + 1].t
+               for i in range(len(tr1.events) - 1))
+
+    p = str(tmp_path / "trace.json")
+    tr1.save(p)
+    tr3 = Trace.load(p)
+    assert tr3.events == tr1.events      # save/load is lossless
+
+    burst = uniform_trace(8, 0.0, ["f1", "f2"])
+    assert burst.duration_s == 0.0 and len(burst.events) == 8
+
+
+def test_open_and_closed_loop_generators(served):
+    orch, batch = served
+    router = Router(orch, RouterConfig(max_concurrency=4,
+                                       max_instances_per_function=4))
+    trace = uniform_trace(6, 0.01, ["fn"])
+    results = OpenLoopGenerator(router, trace,
+                                make_batch=lambda ev: batch).run()
+    assert len(results) == 6 and all(rep is not None for _, rep in results)
+
+    results = ClosedLoopGenerator(router, uniform_trace(6, 0.0, ["fn"]),
+                                  make_batch=lambda ev: batch,
+                                  n_clients=3).run()
+    router.close()
+    assert len(results) == 6
+    assert all(rep.processing_s > 0 for _, rep in results)
+    orch.scale_to_zero("fn")
+
+
+def test_router_multi_function_fairness(served):
+    """Two functions behind one router: both make progress, reports are
+    per-function consistent."""
+    orch, batch = served
+    cfg = SMOKES["olmo-1b"]
+    orch.register("fn_b", cfg, seed=9)
+    router = Router(orch, RouterConfig(max_concurrency=2,
+                                       max_instances_per_function=1))
+    invs = ([router.submit("fn", batch) for _ in range(3)]
+            + [router.submit("fn_b", batch) for _ in range(3)])
+    reports = [inv.result(timeout=300)[1] for inv in invs]
+    router.close()
+    assert len(reports) == 6
+    assert orch.functions["fn_b"].n_invocations >= 3
+    orch.scale_to_zero("fn")
+    orch.scale_to_zero("fn_b")

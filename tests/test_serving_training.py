@@ -1,9 +1,5 @@
 """Serving runtime + training substrate integration tests."""
-import os
-import shutil
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,9 +4,9 @@ from types import SimpleNamespace
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
-from repro.nn.spec import TensorSpec, _partition_spec, tensor
+from repro.nn.spec import _partition_spec, tensor
 
 MESH = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16},
                        axis_names=("pod", "data", "model"))

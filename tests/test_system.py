@@ -2,13 +2,11 @@
 ML functions): the full cold -> record -> warm -> scale-to-zero ->
 prefetch-cold lifecycle, plus the paper's three key observations at test
 scale."""
-import os
-
 import jax
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SMOKES
+from repro.configs import ARCHS
 from repro.configs.base import reduce_for_bench
 from repro.core import (GuestMemoryFile, InstanceArena, ReapConfig,
                         run_invocation)
