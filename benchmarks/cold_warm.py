@@ -7,7 +7,6 @@ serving page faults (the paper reports ~95% on average).
 """
 from __future__ import annotations
 
-import jax
 
 from . import common
 

@@ -9,7 +9,6 @@ exactly this path.
 from __future__ import annotations
 
 import os
-import shutil
 
 from . import common
 

@@ -11,20 +11,35 @@ Two experiments per mode (vanilla | reap):
     shared WS page cache, N instances perform exactly one underlying
     WS-file read (the "How Low Can You Go?" redundant-restore-I/O point).
 
-Each invocation routes through per-function queues + the worker pool, so
-the emitted reports carry queueing delay as a first-class segment.
+Plus a **provisioning-policy A/B** (``--policy``): replay the same Poisson
+and diurnal traces against
+
+  * ``reactive``  — PR 1's data plane: spawn-on-arrival, static keepalive
+    swept by a background reaper (every cold start lands on an invocation);
+  * ``adaptive``  — the SPES-style control plane (serving/policy.py):
+    arrival-history-driven warm targets, off-path prewarming, adaptive
+    keepalive;
+
+and report cold-start fraction + e2e p50/p95 per arm.  ``--quick`` also
+writes a ``BENCH_scalability.json`` artifact (uploaded by CI) so the perf
+trajectory is tracked over time.
 
     PYTHONPATH=src python -m benchmarks.scalability [--quick] [--function f]
+        [--policy {both,reactive,adaptive,off}]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import threading
 import time
 
 from . import common
 
 CONCURRENCY = (1, 2, 4, 8, 16)
 QUICK_CONCURRENCY = (1, 4, 16)
+ARTIFACT = os.path.join(common.ROOT, "BENCH_scalability.json")
 
 
 def _fmt_row(label: str, reports, wall_s: float) -> tuple:
@@ -94,17 +109,164 @@ def run(function: str = "olmo-1b", *, quick: bool = False, verbose=True):
     return rows
 
 
+def _trace_metrics(results, label: str, verbose: bool,
+                   skip_until_s: float = 0.0) -> dict:
+    """Metrics over the steady-state window (events at ``t >=
+    skip_until_s``): the deploy-time cold start of each function is paid by
+    every policy once and would only dilute the A/B signal."""
+    from repro.core.reap import WS_CACHE
+    from repro.serving import summarize
+    results = [(ev, rep) for ev, rep in results if ev.t >= skip_until_s]
+    reports = [rep for _, rep in results if rep is not None]
+    s = summarize(reports)
+    ws = WS_CACHE.stats()
+    lookups = ws["hits"] + ws["misses"]
+    out = {
+        "n_events": len(results),
+        "served": s["n"],
+        "rejected": len(results) - s["n"],
+        "cold": s["cold"],
+        "cold_fraction": round(s["cold_fraction"], 4),
+        "prewarmed_served": s["prewarmed"],
+        "e2e_p50_s": round(s["e2e_p50_s"], 6),
+        "e2e_p95_s": round(s["e2e_p95_s"], 6),
+        "queue_p95_s": round(s["queue_p95_s"], 6),
+        "ws_cache_hit_rate": round(ws["hits"] / lookups, 4) if lookups else 0.0,
+    }
+    if verbose:
+        print(f"  {label:22s} cold={out['cold']:3d}/{out['served']:3d} "
+              f"({100*out['cold_fraction']:.1f}%) "
+              f"prewarmed={out['prewarmed_served']:3d} "
+              f"e2e_p50={out['e2e_p50_s']*1e3:7.1f}ms "
+              f"e2e_p95={out['e2e_p95_s']*1e3:7.1f}ms")
+    return out
+
+
+def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
+                  arms: tuple[str, ...] = ("reactive", "adaptive"),
+                  verbose: bool = True) -> dict:
+    """Replay identical traces under reactive vs adaptive provisioning.
+
+    The reactive arm is PR 1's serving stack verbatim: instances spawn on
+    arrival and a background reaper sweeps the static keepalive.  The
+    adaptive arm adds the prewarming control plane.  Both arms replay the
+    *same* trace objects, so the cold-start fraction and p95 e2e deltas are
+    attributable to provisioning alone.
+    """
+    from repro.configs import SMOKES
+    from repro.core.reap import WS_CACHE
+    from repro.serving import (OpenLoopGenerator, Orchestrator, PolicyConfig,
+                               PrewarmPolicy, Router, RouterConfig,
+                               diurnal_trace, poisson_trace)
+
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
+    store = common.ensure_store()
+    request = common.make_request(cfg, seed=1)
+    prefix = "abq" if quick else "ab"
+    n_fns = 3 if quick else 4
+    names = [f"{prefix}_{function}_{i}" for i in range(n_fns)]
+
+    # Static keepalive chosen so the trace's quiet gaps actually expire it
+    # (the benchmark compresses hours of diurnal traffic into seconds).
+    orch = Orchestrator(store, mode="reap", keepalive_s=0.75, warm_limit=8,
+                        prewarm_concurrency=1)
+    for i, name in enumerate(names):
+        orch.register(name, cfg, seed=i,
+                      warmup_batch=request if i == 0 else None)
+        orch.invoke(name, request)           # record phase
+        orch.scale_to_zero(name)
+
+    dur = 5.0 if quick else 8.0
+    traces = {
+        "poisson": poisson_trace(rate_rps=3.0 * n_fns, duration_s=dur,
+                                 functions=names, seed=11),
+        "diurnal": diurnal_trace(base_rps=1.0, peak_rps=4.0 * n_fns,
+                                 period_s=dur, duration_s=dur,
+                                 functions=names, burst_rps=6.0 * n_fns,
+                                 burst_every_s=dur / 3, burst_len_s=0.05,
+                                 seed=13),
+    }
+
+    out: dict = {}
+    for tname, trace in traces.items():
+        out[tname] = {}
+        if verbose:
+            print(f"\n-- policy A/B: {tname} trace "
+                  f"({len(trace.events)} arrivals over {dur:.0f}s) --")
+        for arm in arms:
+            for name in names:                 # identical starting state
+                orch.set_policy(name, warm_limit=None, keepalive_s=None,
+                                min_warm=0)
+                orch.scale_to_zero(name)
+            common.drop_caches()
+            WS_CACHE.clear()
+            WS_CACHE.reset_stats()
+            router = Router(orch, RouterConfig(max_concurrency=8,
+                                               max_instances_per_function=8))
+            policy = None
+            stop_reaper = threading.Event()
+            reaper = None
+            if arm == "adaptive":
+                policy = PrewarmPolicy(orch, router, PolicyConfig(
+                    interval_s=0.05, window_s=4.0, headroom=2.0,
+                    max_warm=8, min_keepalive_s=0.75)).start()
+            else:
+                def _sweep():                  # PR 1's static-keepalive reaper
+                    while not stop_reaper.wait(0.1):
+                        orch.reap_idle()
+                reaper = threading.Thread(target=_sweep, daemon=True)
+                reaper.start()
+            results = OpenLoopGenerator(router, trace,
+                                        make_batch=lambda ev: request).run()
+            router.close()
+            if policy is not None:
+                policy.stop()
+                orch.prewarm_quiesce()
+            stop_reaper.set()
+            if reaper is not None:
+                reaper.join(timeout=5)
+            out[tname][arm] = _trace_metrics(results, f"{tname}.{arm}",
+                                             verbose,
+                                             skip_until_s=0.25 * dur)
+    for name in names:
+        orch.set_policy(name, warm_limit=None, keepalive_s=None, min_warm=0)
+    orch.close()
+    return out
+
+
+def write_artifact(fig9_rows, policy_ab: dict) -> None:
+    artifact = {
+        "benchmark": "scalability",
+        "fig9": [{"label": label, "us_per_call": us, "derived": derived}
+                 for label, us, derived in fig9_rows],
+        "policy_ab": policy_ab,
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"\nwrote {ARTIFACT}")
+
+
 def main(argv=None):
     from repro.configs import list_archs
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--function", default="olmo-1b")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run: smoke config, capped concurrency")
+    ap.add_argument("--policy", default="both",
+                    choices=("both", "reactive", "adaptive", "off"),
+                    help="which provisioning-policy A/B arms to replay")
     args = ap.parse_args(argv)
     if args.function not in list_archs():
         ap.error(f"unknown --function {args.function!r}; "
                  f"known: {', '.join(list_archs())}")
-    run(args.function, quick=args.quick)
+    rows = run(args.function, quick=args.quick)
+    ab: dict = {}
+    if args.policy != "off":
+        arms = (("reactive", "adaptive") if args.policy == "both"
+                else (args.policy,))
+        ab = run_policy_ab(args.function, quick=args.quick, arms=arms)
+    if args.quick:
+        write_artifact(rows, ab)
 
 
 if __name__ == "__main__":

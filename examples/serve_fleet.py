@@ -10,6 +10,10 @@ Phases:
                          router; cold starts hit the REAP prefetch path and
                          concurrent restores of one function share one WS
                          read through the process-wide cache
+  4. adaptive replay  -- the same trace again, now with the SPES-style
+                         prewarming control plane predicting arrivals and
+                         pre-spawning instances off the critical path:
+                         compare the cold-start fractions
 
     PYTHONPATH=src python examples/serve_fleet.py
 """
@@ -26,13 +30,30 @@ from repro.core import ReapConfig  # noqa: E402
 from repro.core.reap import WS_CACHE  # noqa: E402
 from repro.launch import steps  # noqa: E402
 from repro.serving import (Orchestrator, Router, RouterConfig,  # noqa: E402
-                           poisson_trace, OpenLoopGenerator, summarize)
+                           PolicyConfig, PrewarmPolicy, poisson_trace,
+                           OpenLoopGenerator, summarize)
+
+
+def steady_state(results):
+    """Reports excluding each function's first replay arrival: that one is
+    cold under any policy (no history yet), so the provisioning comparison
+    is over the remaining, predictable traffic."""
+    seen, out = set(), []
+    for ev, rep in results:
+        if rep is None:
+            continue
+        if ev.function not in seen:
+            seen.add(ev.function)
+            continue
+        out.append(rep)
+    return out
 
 
 def main():
     store = ".fleet_store"
     orch = Orchestrator(store, mode="reap", reap=ReapConfig(),
-                        keepalive_s=2.0, warm_limit=4)
+                        keepalive_s=2.0, warm_limit=4,
+                        prewarm_concurrency=1)
     requests = {}
     for name in ARCHS:
         cfg = SMOKES[name]
@@ -57,7 +78,7 @@ def main():
     # cold-starts of one function exercise the shared WS cache.
     names = list(ARCHS)
     mix = {n: (4.0 if i < 3 else 1.0) for i, n in enumerate(names)}
-    trace = poisson_trace(rate_rps=40.0, duration_s=1.0, functions=names,
+    trace = poisson_trace(rate_rps=15.0, duration_s=3.0, functions=names,
                           mix=mix, seed=7)
     trace.save(os.path.join(store, "fleet_trace.json"))
     print(f"\n-- phase 3: open-loop replay ({len(trace.events)} arrivals, "
@@ -77,10 +98,39 @@ def main():
           f"queue_p95={s['queue_p95_s']*1e3:.1f}ms "
           f"e2e_p50={s['e2e_p50_s']*1e3:.1f}ms "
           f"e2e_p95={s['e2e_p95_s']*1e3:.1f}ms")
-    cold = [r for r in reports if r.load_vmm_s > 0]
-    print(f"  cold starts: {len(cold)} "
-          f"(ws_cache_hits={s['ws_cache_hits']}) "
+    print(f"  cold starts: {s['cold']} "
+          f"({100*s['cold_fraction']:.0f}% of served, "
+          f"ws_cache_hits={s['ws_cache_hits']}) "
           f"ws_cache={WS_CACHE.stats()}")
+    ss = summarize(steady_state(results))
+
+    # phase 4: identical trace with the adaptive prewarming control plane —
+    # arrival history sizes per-function warm pools, instances are spawned
+    # on pool threads, and served invocations carry prewarmed=True
+    for name in ARCHS:
+        orch.scale_to_zero(name)
+    time.sleep(2.2)
+    print("\n-- phase 4: adaptive replay (prewarming policy) --")
+    WS_CACHE.clear()              # same cold cache as phase 3, fair compare
+    WS_CACHE.reset_stats()
+    router = Router(orch, RouterConfig(max_concurrency=8,
+                                       max_instances_per_function=4))
+    with PrewarmPolicy(orch, router,
+                       PolicyConfig(interval_s=0.05, max_warm=4)) as policy:
+        results = OpenLoopGenerator(
+            router, trace, make_batch=lambda ev: requests[ev.function]).run()
+        router.close()
+    sa = summarize([rep for _, rep in results if rep is not None])
+    ssa = summarize(steady_state(results))
+    print(f"  served {sa['n']}/{len(results)} "
+          f"e2e_p50={sa['e2e_p50_s']*1e3:.1f}ms "
+          f"e2e_p95={sa['e2e_p95_s']*1e3:.1f}ms")
+    print(f"  cold starts: {sa['cold']} total; steady-state "
+          f"(excl. each function's first arrival): "
+          f"{ssa['cold']}/{ssa['n']} adaptive vs {ss['cold']}/{ss['n']} "
+          f"reactive, prewarmed-served={sa['prewarmed']}")
+    print(f"  policy targets={policy.stats()['targets']}")
+    orch.close()
 
 
 if __name__ == "__main__":

@@ -61,6 +61,7 @@ class ColdStartReport:
     n_prefetched_pages: int = 0
     ws_bytes: int = 0
     ws_cache_hit: bool = False       # WS served from the shared page cache
+    prewarmed: bool = False          # served by a pre-spawned warm instance
 
     @property
     def total_s(self) -> float:
@@ -139,6 +140,14 @@ class WSCache:
     reads; followers block on its completion and install from memory.
     Entries are keyed by ``(base, mtime)`` so a re-record (new WS file)
     invalidates stale data; ``invalidate`` drops an entry eagerly.
+
+    A per-base **generation counter** closes the invalidate-during-read
+    race: a leader mid-``_read_ws`` must not re-insert its (possibly stale)
+    entry after ``write_record``/``drop_record`` invalidated the base —
+    that would resurrect dropped WS data under the old mtime.  The leader
+    snapshots the generation before reading and discards its insert if an
+    invalidation bumped it meanwhile (the caller still installs from the
+    data it read; only the *cache entry* is suppressed).
     """
 
     def __init__(self, capacity_bytes: int = 512 << 20):
@@ -146,11 +155,13 @@ class WSCache:
         self._lock = threading.Lock()
         self._entries: dict[str, tuple[float, list[int], bytes]] = {}
         self._inflight: dict[str, threading.Event] = {}
+        self._gens: dict[str, int] = {}  # bumped by every invalidation
         self._order: list[str] = []      # LRU order, oldest first
         self.hits = 0
         self.misses = 0
         self.reads = 0                   # underlying WS-file reads performed
         self.invalidations = 0
+        self.discarded = 0               # inserts dropped: raced an invalidate
 
     def _lru_touch(self, base: str) -> None:
         if base in self._order:
@@ -183,6 +194,7 @@ class WSCache:
                     ev = threading.Event()
                     self._inflight[base] = ev
                     self.misses += 1
+                    gen = self._gens.get(base, 0)
                     break
             # follower: wait for the leader's read, then re-check the entry
             ev.wait()
@@ -190,17 +202,27 @@ class WSCache:
             pages, data = _read_ws(base, cfg)
             with self._lock:
                 self.reads += 1
-                self._entries[base] = (mtime, pages, data)
-                self._lru_touch(base)
-                self._evict()
+                if self._gens.get(base, 0) == gen:
+                    self._entries[base] = (mtime, pages, data)
+                    self._lru_touch(base)
+                    self._evict()
+                else:
+                    self.discarded += 1  # invalidated mid-read: don't resurrect
             return pages, data, False
         finally:
             with self._lock:
                 self._inflight.pop(base, None)
+                self._gens.pop(base, None)  # no leader left holding a snapshot
             ev.set()
 
     def invalidate(self, base: str) -> None:
         with self._lock:
+            if base in self._inflight:
+                # only an in-flight leader holds a generation snapshot, so
+                # only then does a bump matter — this keeps _gens bounded by
+                # the number of concurrent reads instead of growing with
+                # every base ever invalidated
+                self._gens[base] = self._gens.get(base, 0) + 1
             if self._entries.pop(base, None) is not None:
                 self.invalidations += 1
             if base in self._order:
@@ -208,17 +230,21 @@ class WSCache:
 
     def clear(self) -> None:
         with self._lock:
+            for base in self._inflight:
+                self._gens[base] = self._gens.get(base, 0) + 1
             self._entries.clear()
             self._order.clear()
 
     def reset_stats(self) -> None:
         with self._lock:
-            self.hits = self.misses = self.reads = self.invalidations = 0
+            self.hits = self.misses = self.reads = 0
+            self.invalidations = self.discarded = 0
 
     def stats(self) -> dict:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "reads": self.reads, "invalidations": self.invalidations,
+                    "discarded": self.discarded,
                     "entries": len(self._entries),
                     "bytes": sum(len(d) for _, _, d in self._entries.values())}
 

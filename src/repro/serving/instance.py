@@ -80,10 +80,15 @@ class FunctionInstance:
     _ids = itertools.count()
 
     def __init__(self, name: str, cfg: ModelConfig, base: str,
-                 reap: ReapConfig, *, mode: str = "auto"):
+                 reap: ReapConfig, *, mode: str = "auto",
+                 prewarmed: bool = False):
+        """``prewarmed=True`` marks an instance spawned by the control plane
+        *off* the invocation path: its load/connect/prefetch costs were paid
+        by a pool thread, so no invocation report ever charges them."""
         self.name = name
         self.cfg = cfg
         self.base = base
+        self.prewarmed = prewarmed
         self.instance_id = next(FunctionInstance._ids)
         self._state_lock = threading.Lock()
         self.state = State.LOADING
@@ -155,14 +160,17 @@ class FunctionInstance:
         first = self._n_invocations == 0
         self._n_invocations += 1
         # fresh per-invocation report; load/connect/prefetch costs belong to
-        # the first (cold) invocation only
+        # the first (cold) invocation only — and never to an invocation on a
+        # prewarmed instance, whose restore ran off the critical path
+        on_path = first and not self.prewarmed
         self.report = _dc.replace(
             self.report,
-            load_vmm_s=self.report.load_vmm_s if first else 0.0,
-            connection_s=self.report.connection_s if first else 0.0,
-            prefetch_s=self.report.prefetch_s if first else 0.0,
-            n_prefetched_pages=self.report.n_prefetched_pages if first else 0,
-            ws_cache_hit=self.report.ws_cache_hit if first else False,
+            load_vmm_s=self.report.load_vmm_s if on_path else 0.0,
+            connection_s=self.report.connection_s if on_path else 0.0,
+            prefetch_s=self.report.prefetch_s if on_path else 0.0,
+            n_prefetched_pages=self.report.n_prefetched_pages if on_path else 0,
+            ws_cache_hit=self.report.ws_cache_hit if on_path else False,
+            prewarmed=self.prewarmed,
             processing_s=dt,
             fault_s=stats.fault_seconds - fs0,
             n_faults=stats.n_faults - f0,

@@ -108,6 +108,56 @@ def uniform_trace(n: int, interval_s: float, functions: list[str], *,
                   for i in range(n)])
 
 
+def diurnal_trace(base_rps: float, peak_rps: float, period_s: float,
+                  duration_s: float, functions: list[str], *,
+                  mix: dict[str, float] | None = None,
+                  burst_rps: float = 0.0, burst_every_s: float = 0.0,
+                  burst_len_s: float = 0.1, seed: int = 0) -> Trace:
+    """Non-homogeneous Poisson arrivals with a diurnal (sinusoidal) rate,
+    optionally overlaid with periodic bursts — the Azure-Functions-style
+    shape an adaptive prewarming policy must track (troughs scale to zero,
+    ramps are predicted, bursts stress the warm-pool target).
+
+    Rate profile (requests/s at offset ``t``)::
+
+        rate(t) = base + (peak - base) * (1 - cos(2*pi*t/period)) / 2
+                  [+ burst_rps while t mod burst_every_s < burst_len_s]
+
+    Synthesized by Lewis-Shedler thinning of a homogeneous process at the
+    peak rate, so the trace is exact and replayable from ``seed``.
+    """
+    if peak_rps < base_rps:
+        raise ValueError("peak_rps must be >= base_rps")
+    rng = np.random.default_rng(seed)
+    probs = _normalize_mix(functions, mix)
+
+    def rate(t: float) -> float:
+        r = base_rps + (peak_rps - base_rps) * (
+            1.0 - np.cos(2.0 * np.pi * t / period_s)) / 2.0
+        if burst_rps > 0 and burst_every_s > 0 \
+                and (t % burst_every_s) < burst_len_s:
+            r += burst_rps
+        return r
+
+    rate_max = peak_rps + (burst_rps if burst_every_s > 0 else 0.0)
+    if rate_max <= 0:
+        return Trace([])
+    events: list[TraceEvent] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_max))
+        if t > duration_s:
+            break
+        if rng.uniform() * rate_max > rate(t):   # thinning: reject
+            continue
+        events.append(TraceEvent(
+            t=t,
+            function=functions[int(rng.choice(len(functions), p=probs))],
+            seed=int(rng.integers(0, 2**31)),
+        ))
+    return Trace(events)
+
+
 #: Maps one trace event to a request payload for its function.
 BatchFactory = Callable[[TraceEvent], dict]
 
@@ -160,9 +210,14 @@ class ClosedLoopGenerator:
         self.n_clients = n_clients
         self.think_time_s = think_time_s
 
-    def run(self) -> list[tuple[TraceEvent, ColdStartReport]]:
+    def run(self) -> list[tuple[TraceEvent, ColdStartReport | None]]:
+        """Returns (event, report) per event; report None when the submit
+        was throttled (:class:`AdmissionError`) — parity with
+        :class:`OpenLoopGenerator`.  Only *real* invocation failures abort
+        the run; a throttle is a measured outcome, not an error.
+        """
         events = list(self.trace.events)
-        out: list[tuple[TraceEvent, ColdStartReport]] = []
+        out: list[tuple[TraceEvent, ColdStartReport | None]] = []
         errors: list[BaseException] = []
         out_lock = threading.Lock()
         it_lock = threading.Lock()
@@ -178,6 +233,10 @@ class ClosedLoopGenerator:
                 try:
                     _, rep = self.router.invoke(ev.function,
                                                 self.make_batch(ev))
+                except AdmissionError:
+                    with out_lock:
+                        out.append((ev, None))   # throttled, not failed
+                    continue
                 except BaseException as e:
                     with out_lock:
                         errors.append(e)

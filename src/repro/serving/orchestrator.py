@@ -18,6 +18,7 @@ from __future__ import annotations
 import os
 import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
 from ..configs.base import ModelConfig
@@ -30,7 +31,12 @@ class FunctionRecord:
     """Per-function state: snapshot base, warm pool, invocation stats.
 
     ``lock`` guards ``idle`` and ``stats``; ``n_spawned`` / ``n_invocations``
-    are monotone counters updated under the same lock.
+    / ``n_prewarmed`` are monotone counters updated under the same lock.
+
+    ``warm_limit`` / ``keepalive_s`` are per-function overrides (None =>
+    inherit the orchestrator-wide default); ``min_warm`` is the adaptive
+    policy's floor — the keepalive reaper never shrinks the idle pool below
+    it (policy.py owns all three).
     """
 
     def __init__(self, name: str, cfg: ModelConfig, base: str):
@@ -42,21 +48,38 @@ class FunctionRecord:
         self.stats: list[ColdStartReport] = []
         self.n_spawned = 0
         self.n_invocations = 0
+        self.n_prewarmed = 0
+        self.n_prewarming = 0            # prewarms currently on pool threads
+        self.n_prewarm_failures = 0
+        self.last_prewarm_error: BaseException | None = None
+        self.warm_limit: int | None = None
+        self.keepalive_s: float | None = None
+        self.min_warm = 0
 
 
 class Orchestrator:
     def __init__(self, store_dir: str, *, reap: ReapConfig | None = None,
                  mode: str = "reap", keepalive_s: float = 60.0,
-                 warm_limit: int = 8):
+                 warm_limit: int = 8, prewarm_concurrency: int = 4):
         """mode: 'reap' (record+prefetch) | 'vanilla' (baseline snapshots)."""
         self.store_dir = store_dir
         self.reap = reap or ReapConfig()
         self.mode = mode
         self.keepalive_s = keepalive_s
         self.warm_limit = warm_limit
+        self.prewarm_concurrency = prewarm_concurrency
         self.functions: dict[str, FunctionRecord] = {}
         self._lock = threading.Lock()
+        self._prewarm_pool: ThreadPoolExecutor | None = None
+        self._prewarm_futures: list[Future] = []
+        self._closed = False
         os.makedirs(store_dir, exist_ok=True)
+
+    def _effective_warm_limit(self, rec: FunctionRecord) -> int:
+        return self.warm_limit if rec.warm_limit is None else rec.warm_limit
+
+    def _effective_keepalive(self, rec: FunctionRecord) -> float:
+        return self.keepalive_s if rec.keepalive_s is None else rec.keepalive_s
 
     # -- control plane -------------------------------------------------
 
@@ -89,11 +112,114 @@ class Orchestrator:
             keep = [i for i in rec.idle if not i.try_reclaim()]
             rec.idle = keep
 
+    def set_policy(self, name: str, *, warm_limit: int | None = None,
+                   keepalive_s: float | None = None,
+                   min_warm: int | None = None) -> None:
+        """Per-function provisioning knobs (the policy loop's actuators).
+
+        ``warm_limit``/``keepalive_s`` of None restore the orchestrator-wide
+        defaults; ``min_warm`` is the reaper floor (always explicit).
+        """
+        rec = self.functions[name]
+        with rec.lock:
+            rec.warm_limit = warm_limit
+            rec.keepalive_s = keepalive_s
+            if min_warm is not None:
+                rec.min_warm = min_warm
+
+    def prewarm(self, name: str, n: int, *, wait: bool = False) -> int:
+        """Pre-spawn up to ``n`` warm instances of ``name`` on pool threads.
+
+        The cold-start cost (load VMM, connection restore, WS prefetch,
+        param materialization) is paid here — *off* every invocation's
+        critical path.  Spawns are capped so the idle pool never exceeds the
+        function's warm limit, counting prewarms already in flight.
+        Returns the number of spawns actually scheduled.
+        """
+        rec = self.functions[name]
+        scheduled = 0
+        with self._lock:
+            if self._closed:             # never resurrect the pool after close
+                return 0
+            if self._prewarm_pool is None:
+                self._prewarm_pool = ThreadPoolExecutor(
+                    max_workers=self.prewarm_concurrency,
+                    thread_name_prefix="prewarm")
+            pool = self._prewarm_pool
+        for _ in range(n):
+            with rec.lock:
+                limit = self._effective_warm_limit(rec)
+                if len(rec.idle) + rec.n_prewarming >= limit:
+                    break
+                rec.n_prewarming += 1
+            try:
+                fut = pool.submit(self._prewarm_one, rec)
+            except RuntimeError:        # pool shut down by a concurrent close
+                with rec.lock:
+                    rec.n_prewarming -= 1
+                break
+            scheduled += 1
+            with self._lock:
+                self._prewarm_futures = (
+                    [f for f in self._prewarm_futures if not f.done()] + [fut])
+        if wait:
+            self.prewarm_quiesce()
+        return scheduled
+
+    def prewarm_quiesce(self, timeout: float | None = None) -> None:
+        """Block until every scheduled prewarm has finished (test/bench aid).
+
+        ``timeout`` bounds the *total* wait, not the wait per prewarm.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            futs = list(self._prewarm_futures)
+        for f in futs:
+            left = None if deadline is None else deadline - time.monotonic()
+            f.result(left)
+
+    def _prewarm_one(self, rec: FunctionRecord) -> None:
+        inst = None
+        try:
+            mode = "vanilla" if self.mode == "vanilla" else "auto"
+            inst = FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
+                                    mode=mode, prewarmed=True)
+            inst.make_warm()         # params memory-resident before any arrival
+            if inst.monitor.mode == "record":
+                # No WS record existed yet (function was never cold-invoked):
+                # persist one from the pages make_warm just faulted, so REAP
+                # prefetch engages on the next true cold start instead of the
+                # function staying permanently recordless behind warm pools.
+                # A mispredicted record self-corrects via the §7.2 re-record
+                # fallback.
+                inst.finish_cold()
+            with rec.lock:
+                rec.n_spawned += 1
+                rec.n_prewarmed += 1
+                if len(rec.idle) < self._effective_warm_limit(rec):
+                    rec.idle.append(inst)
+                    return
+            inst.try_reclaim()       # limit shrank while we were spawning
+        except BaseException as e:
+            # a failed prewarm (e.g. records dropped mid-spawn) must neither
+            # leak the half-built instance nor detonate later out of a
+            # Future in prewarm_quiesce — record it and move on
+            with rec.lock:
+                rec.n_prewarm_failures += 1
+                rec.last_prewarm_error = e
+            if inst is not None:
+                inst.reclaim()
+        finally:
+            with rec.lock:
+                rec.n_prewarming -= 1
+
     def reap_idle(self) -> int:
         """Keepalive sweep: reclaim instances idle past the deadline.
 
         Safe to run concurrently with ``invoke``: an instance that a worker
-        just acquired is BUSY and ``try_reclaim`` refuses it.
+        just acquired is BUSY and ``try_reclaim`` refuses it.  Never shrinks
+        a function's idle pool below its policy floor (``min_warm``), so an
+        adaptive target survives keepalive expiry.
         """
         now = time.monotonic()
         n = 0
@@ -101,15 +227,36 @@ class Orchestrator:
             records = list(self.functions.values())
         for rec in records:
             with rec.lock:
+                keepalive = self._effective_keepalive(rec)
+                # oldest-first so the floor keeps the most recently used
+                candidates = sorted(rec.idle, key=lambda i: i.last_used)
                 keep = []
-                for inst in rec.idle:
-                    if (now - inst.last_used > self.keepalive_s
+                n_idle = len(candidates)
+                for inst in candidates:
+                    if (n_idle > rec.min_warm
+                            and now - inst.last_used > keepalive
                             and inst.try_reclaim()):
                         n += 1
+                        n_idle -= 1
                     else:
                         keep.append(inst)
                 rec.idle = keep
         return n
+
+    def close(self) -> None:
+        """Tear down the prewarm pool and reclaim every idle instance.
+
+        Permanent: later ``prewarm`` calls become no-ops (a policy loop
+        still winding down must not resurrect the pool).
+        """
+        with self._lock:
+            self._closed = True
+            pool, self._prewarm_pool = self._prewarm_pool, None
+            self._prewarm_futures = []
+        if pool is not None:
+            pool.shutdown(wait=True)
+        for name in list(self.functions):
+            self.scale_to_zero(name)
 
     # -- data plane ------------------------------------------------------
 
@@ -138,7 +285,9 @@ class Orchestrator:
         with rec.lock:
             rec.stats.append(report)
             rec.n_invocations += 1
-            if len(rec.idle) < self.warm_limit:
+            # never re-park after close(): the teardown sweep already ran
+            # and nothing would ever reclaim a late-parked arena
+            if not self._closed and len(rec.idle) < self._effective_warm_limit(rec):
                 rec.idle.append(inst)
                 return
         inst.try_reclaim()

@@ -35,6 +35,10 @@ class AdmissionError(RuntimeError):
     """Submit rejected: the per-function queue is at ``queue_depth``."""
 
 
+class RouterClosedError(RuntimeError):
+    """The router was closed while this invocation was still queued."""
+
+
 @dataclasses.dataclass
 class RouterConfig:
     max_concurrency: int = 8            # worker-pool size (global)
@@ -94,6 +98,10 @@ class Router:
         self._queues: dict[str, deque[Invocation]] = {}
         self._rr: deque[str] = deque()     # round-robin function order
         self._inflight: dict[str, int] = {}
+        # per-function arrival timestamps (time.monotonic), drained by the
+        # prewarming policy loop; bounded so an idle policy can't leak memory
+        self._arrivals: dict[str, deque[float]] = {}
+        self.max_arrival_history = 4096
         self._closed = False
         self._started = False
         self._workers: list[threading.Thread] = []
@@ -113,12 +121,19 @@ class Router:
         inv = Invocation(name, batch, force_cold)
         with self._cv:
             if self._closed:
-                raise RuntimeError("router is closed")
+                raise RouterClosedError("router is closed")
             q = self._queues.get(name)
             if q is None:
                 q = self._queues[name] = deque()
                 self._rr.append(name)
                 self._inflight.setdefault(name, 0)
+            # demand signal for the policy loop: every arrival counts,
+            # including ones the admission controller is about to throttle
+            arr = self._arrivals.get(name)
+            if arr is None:
+                arr = self._arrivals[name] = deque(
+                    maxlen=self.max_arrival_history)
+            arr.append(time.monotonic())
             if len(q) >= self.cfg.queue_depth:
                 self.rejected += 1
                 raise AdmissionError(
@@ -161,13 +176,35 @@ class Router:
                 self._cv.wait(timeout=left)
 
     def close(self, *, drain: bool = True) -> None:
+        """Shut the router down.
+
+        ``drain=True`` waits for every accepted invocation first.  With
+        ``drain=False`` (or on a never-started router) still-queued
+        invocations are failed with :class:`RouterClosedError` — a waiter
+        blocked in ``result()`` must never hang forever on a closed router.
+        """
         if drain and self._started:
             self.drain()
         with self._cv:
             self._closed = True
+            abandoned = [inv for q in self._queues.values() for inv in q]
+            for q in self._queues.values():
+                q.clear()
             self._cv.notify_all()
+        for inv in abandoned:
+            inv._fail(RouterClosedError(
+                f"router closed with {inv.name!r} still queued"))
         for t in self._workers:
             t.join(timeout=5.0)
+
+    def drain_arrivals(self) -> dict[str, list[float]]:
+        """Pop and return per-function arrival timestamps accumulated since
+        the previous call (``time.monotonic`` values, submit order)."""
+        with self._cv:
+            out = {n: list(d) for n, d in self._arrivals.items() if d}
+            for d in self._arrivals.values():
+                d.clear()
+        return out
 
     def stats(self) -> dict:
         with self._cv:
@@ -234,6 +271,8 @@ def percentile(xs: list[float], q: float) -> float:
 def summarize(reports: list[ColdStartReport]) -> dict:
     """Latency summary of a batch of per-invocation reports."""
     e2e = [r.e2e_s for r in reports]
+    # an invocation is "cold" when restore cost landed on its critical path
+    cold = sum(1 for r in reports if r.load_vmm_s > 0)
     return {
         "n": len(reports),
         "queue_mean_s": sum(r.queue_s for r in reports) / max(len(reports), 1),
@@ -242,4 +281,7 @@ def summarize(reports: list[ColdStartReport]) -> dict:
         "e2e_p50_s": percentile(e2e, 50),
         "e2e_p95_s": percentile(e2e, 95),
         "ws_cache_hits": sum(1 for r in reports if r.ws_cache_hit),
+        "cold": cold,
+        "cold_fraction": cold / max(len(reports), 1),
+        "prewarmed": sum(1 for r in reports if r.prewarmed),
     }

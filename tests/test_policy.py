@@ -1,0 +1,285 @@
+"""Adaptive prewarming control plane: demand model, prewarm API,
+per-function warm limits, reaper floor, and the policy loop."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import SMOKES
+from repro.core import ReapConfig
+from repro.launch import steps
+from repro.serving import (FunctionDemand, Orchestrator, PolicyConfig,
+                           PrewarmPolicy, Router, RouterConfig)
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One registered+recorded function on a module-scoped orchestrator."""
+    store = str(tmp_path_factory.mktemp("pstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 32, 2, "train", jax.random.key(0))
+    orch = Orchestrator(store, mode="reap", reap=ReapConfig())
+    orch.register("fn", cfg, warmup_batch=batch)
+    orch.invoke("fn", batch)          # record phase
+    orch.scale_to_zero("fn")
+    yield orch, batch
+    orch.close()
+
+
+def _reset(orch, name="fn"):
+    orch.set_policy(name, warm_limit=None, keepalive_s=None, min_warm=0)
+    orch.scale_to_zero(name)
+
+
+# -- demand model (pure, synthetic clocks) -----------------------------
+
+def test_demand_rate_and_keepalive():
+    cfg = PolicyConfig(window_s=5.0, keepalive_horizons=8.0,
+                       min_keepalive_s=0.5, max_keepalive_s=60.0)
+    d = FunctionDemand(cfg)
+    now = 1000.0
+    d.observe([now - 2.0 + 0.1 * i for i in range(20)])   # 10 rps for 2s
+    # max(windowed 20/5s, EWMA 1/0.1s) = 10 rps
+    assert d.rate(now) == pytest.approx(10.0, rel=0.05)
+    assert d.active(now)
+    # EWMA tracks the 100ms gap; keepalive = 8 horizons, clamped below 60
+    assert 0.5 <= d.keepalive(now) <= 60.0
+    # demand goes stale once the gap since the last arrival exceeds keepalive
+    assert not d.active(now + 100.0)
+
+
+def test_demand_burst_width_and_robust_keepalive():
+    cfg = PolicyConfig(window_s=5.0, keepalive_horizons=8.0,
+                       min_keepalive_s=0.1)
+    d = FunctionDemand(cfg)
+    now = 50.0
+    # two 4-wide simultaneous bursts 1.5s apart
+    d.observe([now - 1.5] * 4 + [now] * 4)
+    assert d.peak_concurrency(0.05, now) == 4
+    # intra-burst gaps drive the EWMA to ~0, but the windowed mean keeps
+    # the keepalive spanning the burst period (no collapse between bursts)
+    assert d.ewma_interarrival < 0.3
+    assert d.keepalive(now) >= 8.0 * (5.0 / 8) * 0.99
+    assert d.active(now + 1.4)        # still live when the next burst lands
+
+
+# -- orchestrator prewarm + limits + reaper floor ----------------------
+
+def test_prewarm_serves_arrivals_without_restore_cost(served):
+    """The acceptance property: a prewarmed instance's restore (load VMM,
+    connection, WS prefetch) never lands on an invocation's critical path."""
+    orch, batch = served
+    _reset(orch)
+    rec = orch.functions["fn"]
+    n = orch.prewarm("fn", 2, wait=True)
+    assert n == 2
+    with rec.lock:
+        assert len(rec.idle) == 2
+    assert rec.n_prewarmed >= 2
+
+    router = Router(orch, RouterConfig(max_concurrency=2,
+                                       max_instances_per_function=2))
+    results = router.map([("fn", batch)] * 2)
+    router.close()
+    for _, rep in results:
+        assert rep.prewarmed
+        assert rep.load_vmm_s == 0.0       # paid off-path by the pool thread
+        assert rep.prefetch_s == 0.0
+        assert rep.connection_s == 0.0
+        assert rep.processing_s > 0
+    _reset(orch)
+
+
+def test_prewarm_respects_per_function_warm_limit(served):
+    orch, batch = served
+    _reset(orch)
+    orch.set_policy("fn", warm_limit=1)
+    rec = orch.functions["fn"]
+    scheduled = orch.prewarm("fn", 3, wait=True)
+    assert scheduled <= 1
+    with rec.lock:
+        assert len(rec.idle) <= 1
+    _reset(orch)
+
+
+def test_reaper_never_reclaims_below_policy_floor(served):
+    orch, batch = served
+    _reset(orch)
+    orch.set_policy("fn", warm_limit=3, keepalive_s=0.0, min_warm=2)
+    orch.prewarm("fn", 3, wait=True)
+    rec = orch.functions["fn"]
+    with rec.lock:
+        assert len(rec.idle) == 3
+    time.sleep(0.01)                  # every instance is past keepalive=0
+    orch.reap_idle()
+    with rec.lock:
+        assert len(rec.idle) == 2     # the min_warm floor held
+    orch.set_policy("fn", warm_limit=3, keepalive_s=0.0, min_warm=0)
+    time.sleep(0.01)
+    orch.reap_idle()
+    with rec.lock:
+        assert len(rec.idle) == 0     # floor lifted => scale to zero
+    _reset(orch)
+
+
+# -- policy loop --------------------------------------------------------
+
+def test_policy_step_prewarms_and_sets_knobs(served):
+    orch, batch = served
+    _reset(orch)
+    rec = orch.functions["fn"]
+    policy = PrewarmPolicy(orch, router=None, cfg=PolicyConfig(
+        window_s=5.0, headroom=2.0, max_warm=4, sweep=False))
+    now = time.monotonic()
+    # a steady 20 rps history, including pairs inside a restore horizon
+    policy.ingest({"fn": [now - 1.0 + 0.05 * i for i in range(20)]})
+    applied = policy.step(now)
+    assert applied["fn"] >= 1
+    orch.prewarm_quiesce()
+    with rec.lock:
+        assert len(rec.idle) >= 1     # prewarm happened off-path
+        assert rec.min_warm == applied["fn"]
+        # the cap only ever rises above the orchestrator default
+        assert rec.warm_limit == max(applied["fn"], orch.warm_limit)
+        assert rec.keepalive_s is not None
+    out, rep = orch.invoke("fn", batch)
+    assert rep.prewarmed and rep.load_vmm_s == 0.0
+    _reset(orch)
+
+
+def test_policy_target_zero_when_demand_stops(served):
+    orch, batch = served
+    _reset(orch)
+    policy = PrewarmPolicy(orch, router=None, cfg=PolicyConfig(sweep=False))
+    now = time.monotonic()
+    policy.ingest({"fn": [now - 0.2, now - 0.1, now]})
+    assert policy.step(now)["fn"] >= 1
+    orch.prewarm_quiesce()
+    # long after the last arrival the forecast goes to zero and the floor
+    # drops, so a sweep can reclaim everything
+    applied = policy.step(now + 10_000.0)
+    assert applied["fn"] == 0
+    rec = orch.functions["fn"]
+    assert rec.min_warm == 0
+    orch.set_policy("fn", keepalive_s=0.0, min_warm=0)
+    time.sleep(0.01)
+    orch.reap_idle()
+    with rec.lock:
+        assert len(rec.idle) == 0
+    _reset(orch)
+
+
+def test_policy_loop_with_router_end_to_end(served):
+    """Background loop + router: arrivals feed the policy, later arrivals
+    are served by prewarmed instances."""
+    orch, batch = served
+    _reset(orch)
+    router = Router(orch, RouterConfig(max_concurrency=4,
+                                       max_instances_per_function=4))
+    with PrewarmPolicy(orch, router, PolicyConfig(
+            interval_s=0.02, window_s=5.0, max_warm=4)) as policy:
+        reports = []
+        for _ in range(4):            # spaced arrivals let the loop react
+            _, rep = router.invoke("fn", batch, timeout=120)
+            reports.append(rep)
+            time.sleep(0.08)
+        deadline = time.monotonic() + 5.0
+        while not policy.targets.get("fn") and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert policy.targets.get("fn", 0) >= 1
+        assert policy.n_steps > 0
+    router.close()
+    assert any(r.prewarmed for r in reports[1:]) or orch.functions[
+        "fn"].n_prewarmed > 0
+    _reset(orch)
+
+
+def test_policy_loop_survives_errors(served):
+    """A mid-step exception (e.g. racing deregistration) must not kill the
+    control loop thread."""
+    orch, batch = served
+    policy = PrewarmPolicy(orch, router=None,
+                           cfg=PolicyConfig(interval_s=0.01, sweep=False))
+    boom = {"n": 0}
+
+    def bad_step(now=None):
+        boom["n"] += 1
+        if boom["n"] == 1:
+            raise RuntimeError("transient")
+        return PrewarmPolicy.step(policy, now)
+
+    policy.step = bad_step
+    policy.start()
+    deadline = time.monotonic() + 5.0
+    while boom["n"] < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    policy.stop()
+    assert boom["n"] >= 3             # kept stepping after the error
+
+
+def test_prewarm_of_recordless_function_writes_record(served):
+    """Prewarming a function that was never cold-invoked must still persist
+    a WS record, so REAP prefetch engages on later true cold starts instead
+    of the function staying recordless behind warm pools."""
+    from repro.core.reap import has_record
+    orch, batch = served
+    cfg = SMOKES["olmo-1b"]
+    rec = orch.register("fn_rless", cfg, seed=3)
+    assert not has_record(rec.base)
+    orch.prewarm("fn_rless", 1, wait=True)
+    assert has_record(rec.base)          # record written off-path
+    _, rep = orch.invoke("fn_rless", batch)
+    assert rep.prewarmed and rep.load_vmm_s == 0.0
+    orch.scale_to_zero("fn_rless")
+    _, rep = orch.invoke("fn_rless", batch, force_cold=True)
+    assert rep.n_prefetched_pages > 0    # next cold start prefetches
+    orch.scale_to_zero("fn_rless")
+
+
+def test_prewarm_unknown_function_raises(served):
+    orch, _ = served
+    with pytest.raises(KeyError):
+        orch.prewarm("nope", 1)
+
+
+def test_concurrent_prewarm_and_invocations(served):
+    """Prewarming races the data plane: limits hold and nothing deadlocks."""
+    orch, batch = served
+    _reset(orch)
+    orch.set_policy("fn", warm_limit=3)
+    router = Router(orch, RouterConfig(max_concurrency=4,
+                                       max_instances_per_function=4))
+    stop = threading.Event()
+
+    def prewarmer():
+        while not stop.is_set():
+            orch.prewarm("fn", 2)
+            time.sleep(0.005)
+
+    t = threading.Thread(target=prewarmer, daemon=True)
+    t.start()
+    try:
+        results = router.map([("fn", batch)] * 10)
+    finally:
+        stop.set()
+        t.join(timeout=5)
+    router.close()
+    orch.prewarm_quiesce()
+    assert len(results) == 10
+    assert all(rep.processing_s > 0 for _, rep in results)
+    rec = orch.functions["fn"]
+    with rec.lock:
+        assert len(rec.idle) <= 3     # per-function limit held under the race
+    _reset(orch)
+
+
+def test_close_makes_prewarm_noop(served):
+    """Runs last in this module: close() is permanent — a policy loop still
+    winding down must not resurrect the prewarm pool."""
+    orch, batch = served
+    orch.close()
+    assert orch.prewarm("fn", 2, wait=True) == 0
+    rec = orch.functions["fn"]
+    with rec.lock:
+        assert len(rec.idle) == 0

@@ -6,11 +6,12 @@ import pytest
 
 from repro.configs import SMOKES
 from repro.core import ReapConfig
-from repro.core.reap import WS_CACHE
+from repro.core.reap import WS_CACHE, ColdStartReport
 from repro.launch import steps
 from repro.serving import (AdmissionError, Orchestrator, Router, RouterConfig,
-                           State, Trace, ClosedLoopGenerator,
-                           OpenLoopGenerator, poisson_trace, uniform_trace)
+                           RouterClosedError, State, Trace,
+                           ClosedLoopGenerator, OpenLoopGenerator,
+                           diurnal_trace, poisson_trace, uniform_trace)
 
 
 @pytest.fixture(scope="module")
@@ -134,6 +135,143 @@ def test_admission_control_and_queueing_delay(served):
     orch.scale_to_zero("fn")
 
 
+def test_close_fails_pending_invocations(served):
+    """close(drain=False) must fail still-queued invocations instead of
+    leaving their waiters hanging in result() forever."""
+    orch, batch = served
+    router = Router(orch, RouterConfig(), start=False)   # no workers yet
+    invs = [router.submit("fn", batch) for _ in range(3)]
+    router.close(drain=False)
+    for inv in invs:
+        with pytest.raises(RouterClosedError):
+            inv.result(timeout=5)                        # resolves, not hangs
+        assert inv.done()
+    with pytest.raises(RouterClosedError):
+        router.submit("fn", batch)                       # closed => rejected
+
+
+def test_close_drain_still_serves_accepted_work(served):
+    orch, batch = served
+    router = Router(orch, RouterConfig(max_concurrency=2,
+                                       max_instances_per_function=2))
+    invs = [router.submit("fn", batch) for _ in range(4)]
+    router.close()                                       # drain=True default
+    for inv in invs:
+        _, rep = inv.result(timeout=120)
+        assert rep.processing_s > 0
+    orch.scale_to_zero("fn")
+
+
+def test_router_exposes_arrival_timestamps(served):
+    orch, batch = served
+    router = Router(orch, RouterConfig(max_concurrency=2,
+                                       max_instances_per_function=2))
+    router.map([("fn", batch)] * 3)
+    arr = router.drain_arrivals()
+    assert len(arr["fn"]) == 3
+    assert arr["fn"] == sorted(arr["fn"])
+    assert router.drain_arrivals() == {}                 # drained
+    router.close()
+    orch.scale_to_zero("fn")
+
+
+class _ThrottlingRouter:
+    """Stand-in router: throttles odd-seed events, serves the rest."""
+
+    def __init__(self, fail_on: BaseException | None = None):
+        self.fail_on = fail_on
+        self.n_throttled = 0
+
+    def invoke(self, name, batch, **kw):
+        ev_seed = batch["seed"]
+        if self.fail_on is not None and ev_seed == 2:
+            raise self.fail_on
+        if ev_seed % 2 == 1:
+            self.n_throttled += 1
+            raise AdmissionError("backlog full")
+        return None, ColdStartReport(processing_s=1e-4)
+
+
+def test_closed_loop_records_throttles_as_rejections():
+    """AdmissionError must not abort the run: throttled submits are recorded
+    as rejections (report None), parity with OpenLoopGenerator."""
+    trace = uniform_trace(8, 0.0, ["fn"])                # seeds 0..7
+    router = _ThrottlingRouter()
+    results = ClosedLoopGenerator(router, trace,
+                                  make_batch=lambda ev: {"seed": ev.seed},
+                                  n_clients=3).run()
+    assert len(results) == 8                             # every event accounted
+    rejected = [ev for ev, rep in results if rep is None]
+    served = [rep for _, rep in results if rep is not None]
+    assert len(rejected) == 4 and router.n_throttled == 4
+    assert all(rep.processing_s > 0 for rep in served)
+
+
+def test_closed_loop_still_raises_on_real_failures():
+    trace = uniform_trace(8, 0.0, ["fn"])
+    router = _ThrottlingRouter(fail_on=ValueError("instance died"))
+    with pytest.raises(ValueError):
+        ClosedLoopGenerator(router, trace,
+                            make_batch=lambda ev: {"seed": ev.seed},
+                            n_clients=2).run()
+
+
+def test_ws_cache_invalidate_during_read_is_not_resurrected(
+        tmp_path, monkeypatch):
+    """A leader mid-read must not re-insert its entry after an invalidation
+    (drop_record/write_record) — that would resurrect dropped WS data."""
+    from repro.core import reap as reap_mod
+    cache = reap_mod.WSCache()
+    base = str(tmp_path / "f")
+    with open(reap_mod.ws_path(base), "wb") as f:
+        f.write(b"x")                                    # only mtime matters
+    started, release = threading.Event(), threading.Event()
+
+    def slow_read(b, cfg):
+        started.set()
+        assert release.wait(5)
+        return [0], b"A" * 4096
+
+    monkeypatch.setattr(reap_mod, "_read_ws", slow_read)
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.update(r=cache.fetch(base, ReapConfig())),
+        daemon=True)
+    t.start()
+    assert started.wait(5)
+    cache.invalidate(base)            # drop/re-record while the read is out
+    release.set()
+    t.join(5)
+    pages, data, hit = out["r"]
+    assert not hit and data == b"A" * 4096   # the leader still got its data
+    s = cache.stats()
+    assert s["entries"] == 0          # ...but the stale entry was discarded
+    assert s["discarded"] == 1
+    # a later fetch must do a fresh read, never serve the pre-invalidate data
+    reads0 = cache.stats()["reads"]
+    _, _, hit = cache.fetch(base, ReapConfig())
+    assert not hit and cache.stats()["reads"] == reads0 + 1
+
+
+def test_ws_cache_insert_survives_unrelated_invalidation(tmp_path,
+                                                         monkeypatch):
+    """The generation counter is per-base: invalidating another function
+    must not discard this leader's insert."""
+    from repro.core import reap as reap_mod
+    cache = reap_mod.WSCache()
+    base, other = str(tmp_path / "f"), str(tmp_path / "g")
+    for b in (base, other):
+        with open(reap_mod.ws_path(b), "wb") as f:
+            f.write(b"x")
+    monkeypatch.setattr(reap_mod, "_read_ws",
+                        lambda b, cfg: ([0], b"B" * 4096))
+    cache.invalidate(other)
+    pages, data, hit = cache.fetch(base, ReapConfig())
+    assert not hit and cache.stats()["entries"] == 1
+    _, _, hit = cache.fetch(base, ReapConfig())
+    assert hit                        # entry survived, second fetch is a hit
+
+
 def test_trace_roundtrip_and_determinism(tmp_path):
     tr1 = poisson_trace(rate_rps=50, duration_s=2.0,
                         functions=["a", "b"], mix={"a": 3, "b": 1},
@@ -154,6 +292,20 @@ def test_trace_roundtrip_and_determinism(tmp_path):
 
     burst = uniform_trace(8, 0.0, ["f1", "f2"])
     assert burst.duration_s == 0.0 and len(burst.events) == 8
+
+    d1 = diurnal_trace(1.0, 30.0, 4.0, 4.0, ["a", "b"],
+                       burst_rps=40.0, burst_every_s=1.5, seed=5)
+    d2 = diurnal_trace(1.0, 30.0, 4.0, 4.0, ["a", "b"],
+                       burst_rps=40.0, burst_every_s=1.5, seed=5)
+    assert d1.events == d2.events and len(d1.events) > 10   # replayable
+    assert all(0 <= e.t <= 4.0 for e in d1.events)
+    assert all(d1.events[i].t <= d1.events[i + 1].t
+               for i in range(len(d1.events) - 1))
+    # sinusoidal profile: the middle half carries most of the arrivals
+    mid = sum(1 for e in d1.events if 1.0 <= e.t <= 3.0)
+    assert mid > len(d1.events) / 2
+    with pytest.raises(ValueError):
+        diurnal_trace(5.0, 1.0, 4.0, 4.0, ["a"])            # peak < base
 
 
 def test_open_and_closed_loop_generators(served):
