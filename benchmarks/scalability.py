@@ -25,7 +25,10 @@ writes a ``BENCH_scalability.json`` artifact (uploaded by CI) so the perf
 trajectory is tracked over time.
 
     PYTHONPATH=src python -m benchmarks.scalability [--quick] [--function f]
-        [--policy {both,reactive,adaptive,off}]
+        [--policy {both,reactive,adaptive,off}] [--trace-file azure.csv]
+
+``--trace-file`` replays a real Azure Functions 2019 invocations-per-minute
+CSV (time-compressed onto the registered functions) as a third A/B trace.
 """
 from __future__ import annotations
 
@@ -144,6 +147,7 @@ def _trace_metrics(results, label: str, verbose: bool,
 
 def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
                   arms: tuple[str, ...] = ("reactive", "adaptive"),
+                  trace_file: str | None = None,
                   verbose: bool = True) -> dict:
     """Replay identical traces under reactive vs adaptive provisioning.
 
@@ -157,7 +161,7 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
     from repro.core.reap import WS_CACHE
     from repro.serving import (OpenLoopGenerator, Orchestrator, PolicyConfig,
                                PrewarmPolicy, Router, RouterConfig,
-                               diurnal_trace, poisson_trace)
+                               azure_trace, diurnal_trace, poisson_trace)
 
     cfg = SMOKES[function] if quick else common.bench_functions()[function]
     store = common.ensure_store()
@@ -186,6 +190,12 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
                                  burst_every_s=dur / 3, burst_len_s=0.05,
                                  seed=13),
     }
+    if trace_file is not None:
+        # real production arrival shapes (Azure Functions 2019 CSV), the
+        # busiest rows mapped onto this run's registered functions and the
+        # day compressed into the benchmark window
+        traces["azure"] = azure_trace(trace_file, functions=names,
+                                      duration_s=dur, seed=17)
 
     out: dict = {}
     for tname, trace in traces.items():
@@ -255,6 +265,9 @@ def main(argv=None):
     ap.add_argument("--policy", default="both",
                     choices=("both", "reactive", "adaptive", "off"),
                     help="which provisioning-policy A/B arms to replay")
+    ap.add_argument("--trace-file", default=None, metavar="CSV",
+                    help="Azure Functions 2019 invocations-per-minute CSV; "
+                         "adds an 'azure' trace to the policy A/B")
     args = ap.parse_args(argv)
     if args.function not in list_archs():
         ap.error(f"unknown --function {args.function!r}; "
@@ -264,7 +277,8 @@ def main(argv=None):
     if args.policy != "off":
         arms = (("reactive", "adaptive") if args.policy == "both"
                 else (args.policy,))
-        ab = run_policy_ab(args.function, quick=args.quick, arms=arms)
+        ab = run_policy_ab(args.function, quick=args.quick, arms=arms,
+                           trace_file=args.trace_file)
     if args.quick:
         write_artifact(rows, ab)
 

@@ -1,0 +1,142 @@
+"""WorkerNode: one host of the simulated fleet.
+
+A node bundles the single-host serving stack PR 1/PR 2 built — an
+:class:`~repro.serving.Orchestrator` (instance pool + keepalive), a
+:class:`~repro.serving.Router` (queues + worker pool + admission), and
+optionally a per-node :class:`~repro.serving.PrewarmPolicy` control loop —
+behind one id, one capacity figure, and one liveness flag, plus the
+node-local L1 WS cache the sharded store attached (snapstore.py).
+
+The cluster scheduler reads three signals off a node when scoring a
+placement: ``warm_count(name)`` (an idle instance => zero-restore serve),
+``ws_resident(name)`` (L1 WS hit => cheap cold start), and ``load()``
+(queued + in-flight vs capacity).  ``kill()`` simulates host failure:
+queued invocations fail fast (RouterClosedError) so the cluster layer can
+reroute them — they are never left hanging — while invocations already
+executing run to completion (their results are kept; the "connection"
+outlives the control plane in this simulation).
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+from ..configs.base import ModelConfig
+from ..core import ReapConfig
+from ..core.reap import WSCache
+from ..serving import (Orchestrator, PolicyConfig, PrewarmPolicy, Router,
+                       RouterConfig)
+
+
+class NodeDownError(RuntimeError):
+    """The target node was killed (or closed) before accepting the work."""
+
+
+class WorkerNode:
+    def __init__(self, node_id: str, store_dir: str, *,
+                 ws_cache: WSCache | None = None,
+                 reap: ReapConfig | None = None, mode: str = "reap",
+                 max_concurrency: int = 4,
+                 max_instances_per_function: int = 4,
+                 queue_depth: int = 256,
+                 keepalive_s: float = 60.0, warm_limit: int = 8,
+                 policy: PolicyConfig | None = None):
+        """``ws_cache``: this node's L1 (usually ``store.attach(node_id)``);
+        ``policy``: when given, an adaptive prewarming loop runs per node.
+        """
+        self.node_id = node_id
+        self.ws_cache = ws_cache
+        self.capacity = max_concurrency
+        self.orch = Orchestrator(store_dir, reap=reap, mode=mode,
+                                 keepalive_s=keepalive_s,
+                                 warm_limit=warm_limit, ws_cache=ws_cache)
+        self.router = Router(self.orch, RouterConfig(
+            max_concurrency=max_concurrency,
+            max_instances_per_function=max_instances_per_function,
+            queue_depth=queue_depth))
+        self.policy = (PrewarmPolicy(self.orch, self.router, policy).start()
+                       if policy is not None else None)
+        self._mu = threading.Lock()
+        self.alive = True
+
+    # -- control plane --------------------------------------------------
+
+    def register(self, name: str, cfg: ModelConfig, *, seed: int = 0,
+                 warmup_batch: dict | None = None):
+        """Register a function on this node.  All nodes share one origin
+        store_dir, so the snapshot is built by whichever node registers
+        first and reused read-only by the rest."""
+        return self.orch.register(name, cfg, seed=seed,
+                                  warmup_batch=warmup_batch)
+
+    def kill(self) -> None:
+        """Simulated host failure.  Fails every queued invocation fast
+        (their waiters see RouterClosedError and the cluster reroutes);
+        in-flight invocations finish and keep their results.  The router
+        dies *first* — stopping the policy loop first would join a thread
+        mid-sleep and hand the workers tens of milliseconds to drain the
+        queue a crash should have stranded."""
+        with self._mu:
+            if not self.alive:
+                return
+            self.alive = False
+        self.router.close(drain=False)
+        if self.policy is not None:
+            self.policy.stop()
+        self.orch.close()
+
+    def close(self) -> None:
+        """Graceful shutdown: drain accepted work, then tear down."""
+        with self._mu:
+            if not self.alive:
+                return
+            self.alive = False
+        if self.policy is not None:
+            self.policy.stop()
+        self.router.close(drain=True)
+        self.orch.close()
+
+    # -- data plane ------------------------------------------------------
+
+    def submit(self, name: str, batch: dict, *, force_cold: bool = False):
+        """Enqueue one invocation; raises :class:`NodeDownError` if the
+        node is dead (the scheduler treats it like any placement failure
+        and tries the next candidate)."""
+        if not self.alive:
+            raise NodeDownError(f"node {self.node_id} is down")
+        return self.router.submit(name, batch, force_cold=force_cold)
+
+    # -- scheduler signals -----------------------------------------------
+
+    def load(self) -> int:
+        """Queued + in-flight invocations on this node."""
+        s = self.router.stats()
+        return sum(s["queued"].values()) + sum(s["inflight"].values())
+
+    def warm_count(self, name: str) -> int:
+        """Idle warm instances of ``name`` parked on this node."""
+        return self.orch.idle_count(name)
+
+    def ws_resident(self, name: str) -> bool:
+        """Is ``name``'s working set resident in this node's L1 cache?"""
+        if self.ws_cache is None:
+            return False
+        return self.ws_cache.contains(os.path.join(self.orch.store_dir, name))
+
+    def stats(self) -> dict:
+        out = {
+            "node": self.node_id,
+            "alive": self.alive,
+            "capacity": self.capacity,
+            "load": self.load() if self.alive else 0,
+            "router": self.router.stats(),
+        }
+        if self.ws_cache is not None:
+            out["ws_cache"] = self.ws_cache.stats()
+        if self.policy is not None:
+            out["policy"] = self.policy.stats()
+        return out
+
+    def __repr__(self) -> str:
+        return (f"WorkerNode({self.node_id!r}, alive={self.alive}, "
+                f"load={self.load() if self.alive else '-'}/{self.capacity})")

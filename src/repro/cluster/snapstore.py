@@ -1,0 +1,249 @@
+"""Sharded snapshot store: fleet-wide two-tier WS record serving.
+
+Within one host, :data:`repro.core.reap.WS_CACHE` already collapses N
+concurrent cold-starts into one WS-file read.  Across a fleet the same
+redundancy reappears one level up: every host that cold-starts function
+*f* re-reads *f*'s working set from the origin (shared) disk.  "How Low
+Can You Go?" (Tan et al., 2021) measures exactly this — cold-start floors
+dominated by state-loading I/O that a shared tier can amortize.
+
+This module shards that tier by the consistent-hash ring (shardmap.py):
+
+  * every node gets its own bounded :class:`~repro.core.reap.WSCache`
+    (**L1**, attached via :meth:`ShardedSnapshotStore.attach`);
+  * each function name hashes to 1..R **owner** shards; an owner's L1
+    misses go straight to the origin disk (it *is* the serving shard);
+  * a non-owner's L1 miss **peeks** an alive owner's cache: a resident WS
+    is transferred over a modeled network (:class:`TransferModel`,
+    latency + per-page bandwidth cost paid as real sleep time so
+    benchmarks observe it) and installed locally — restores resolve
+    **local hit -> remote fetch -> origin disk**;
+  * a *cold* owner does not serve (counted ``remote_misses``) — the
+    requester reads origin itself.  Owner caches are populated by their
+    own cold starts and by :meth:`warm_owners` (the scheduler's
+    ``rebalance()`` runs it after every ring change);
+  * when no owner is alive (node failure), the non-owner falls back to
+    the origin disk and the event is counted (``dead_owner_fallbacks``).
+
+Deadlock-freedom by construction: the remote tier uses
+:meth:`~repro.core.reap.WSCache.peek`, which serves only *completed*
+entries and never joins another cache's in-flight single-flight read — so
+no thread ever blocks on another cache's event, and ring changes mid-fetch
+(which can flip ownership between two nodes that are simultaneously
+fetching) cannot create a cross-cache wait cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+
+from ..core.reap import PAGE, ReapConfig, WSCache, _read_ws, has_record
+from .shardmap import ConsistentHashRing
+
+
+@dataclasses.dataclass
+class TransferModel:
+    """Cost model for moving WS pages between hosts.
+
+    ``cost_s = latency_s + n_bytes / bytes_per_s`` — a one-way RPC plus a
+    bandwidth term per page.  Defaults model a ~10 GbE fabric with sub-ms
+    RPC latency; benchmarks lower ``gbps`` to make tier placement visible
+    at smoke-config WS sizes.
+    """
+    latency_s: float = 5e-4
+    gbps: float = 10.0
+
+    def cost_s(self, n_bytes: int) -> float:
+        return self.latency_s + n_bytes * 8.0 / (self.gbps * 1e9)
+
+    def cost_pages(self, n_pages: int) -> float:
+        return self.cost_s(n_pages * PAGE)
+
+
+class ShardedSnapshotStore:
+    """Fleet-wide WS-record store sharded over a consistent-hash ring.
+
+    One instance spans the whole (simulated) fleet.  Per-node caches are
+    created by :meth:`attach`; ownership queries and node liveness live
+    here so a node's miss path can route around dead owners.
+    """
+
+    def __init__(self, ring: ConsistentHashRing, *,
+                 transfer: TransferModel | None = None,
+                 replication: int = 1,
+                 cache_capacity_bytes: int = 256 << 20,
+                 reap: ReapConfig | None = None,
+                 sleep=time.sleep):
+        if replication < 1:
+            raise ValueError("replication must be >= 1")
+        self.ring = ring
+        self.transfer = transfer or TransferModel()
+        self.replication = replication
+        self.reap = reap or ReapConfig()     # read config for warm passes
+        self.cache_capacity_bytes = cache_capacity_bytes
+        self.caches: dict[str, WSCache] = {}
+        self._alive: dict[str, bool] = {}
+        self._hot: dict[str, int] = {}       # per-function replication override
+        self._mu = threading.Lock()
+        self._sleep = sleep                  # injectable for tests
+        self.remote_fetches = 0
+        self.remote_misses = 0               # owner alive but cache cold
+        self.origin_reads = 0
+        self.dead_owner_fallbacks = 0
+        self.transfer_bytes = 0
+        self.transfer_s = 0.0
+
+    # -- membership -----------------------------------------------------
+
+    def attach(self, node_id: str, *,
+               capacity_bytes: int | None = None) -> WSCache:
+        """Create (or return) ``node_id``'s L1 cache, wired so its misses
+        resolve through the shard tier.  Also joins the node to the ring
+        if absent."""
+        with self._mu:
+            cache = self.caches.get(node_id)
+            if cache is None:
+                cap = (self.cache_capacity_bytes if capacity_bytes is None
+                       else capacity_bytes)
+                cache = WSCache(
+                    cap,
+                    source=lambda base, cfg, _n=node_id:
+                        self._shard_fetch(_n, base, cfg))
+                self.caches[node_id] = cache
+            self._alive[node_id] = True
+        self.ring.add(node_id)
+        return cache
+
+    def set_alive(self, node_id: str, alive: bool) -> None:
+        """Mark a node up/down for the fetch path.  A down node also leaves
+        the ring, so new placements/ownership exclude it (minimal remap)."""
+        with self._mu:
+            self._alive[node_id] = alive
+        if alive:
+            self.ring.add(node_id)
+        else:
+            self.ring.remove(node_id)
+
+    def is_alive(self, node_id: str) -> bool:
+        with self._mu:
+            return self._alive.get(node_id, False)
+
+    # -- ownership ------------------------------------------------------
+
+    def set_replication(self, name: str, n: int) -> None:
+        """Raise (or lower) one function's replica count — the hot-function
+        knob: a popular WS served from R shards instead of one."""
+        if n < 1:
+            raise ValueError("replication must be >= 1")
+        with self._mu:
+            self._hot[name] = n
+
+    def replication_of(self, name: str) -> int:
+        with self._mu:
+            return self._hot.get(name, self.replication)
+
+    def owners(self, name: str) -> list[str]:
+        """Owner shards for ``name`` in preference order (primary first)."""
+        return self.ring.lookup(name, self.replication_of(name))
+
+    # -- fetch path (per-node WSCache source hook) ----------------------
+
+    def _shard_fetch(self, node_id: str, base: str, cfg: ReapConfig):
+        """L1-miss resolution for ``node_id``: peek an alive owner's cache
+        over the modeled network, else origin disk.  Runs outside any
+        cache lock (the WSCache leader pattern), so the transfer sleep
+        never blocks other functions' fetches; ``peek`` never blocks at
+        all, so no cross-cache wait cycle can form."""
+        name = os.path.basename(base)
+        owners = self.owners(name)
+        if node_id not in owners:
+            any_alive = False
+            for owner in owners:
+                with self._mu:
+                    cache = self.caches.get(owner)
+                    up = self._alive.get(owner, False)
+                if cache is None or not up:
+                    continue
+                any_alive = True
+                served = cache.peek(base)
+                if served is None:
+                    continue             # owner is cold: try next replica
+                pages, data = served
+                cost = self.transfer.cost_s(len(data))
+                self._sleep(cost)
+                with self._mu:
+                    self.remote_fetches += 1
+                    self.transfer_bytes += len(data)
+                    self.transfer_s += cost
+                return pages, data
+            if owners:
+                with self._mu:
+                    if any_alive:
+                        self.remote_misses += 1     # cold owners only
+                    else:
+                        self.dead_owner_fallbacks += 1
+        pages, data = _read_ws(base, cfg)
+        with self._mu:
+            self.origin_reads += 1
+        return pages, data
+
+    # -- maintenance ----------------------------------------------------
+
+    def resident(self, node_id: str, base: str) -> bool:
+        """Scheduler locality probe: does ``node_id``'s L1 hold ``base``?"""
+        cache = self.caches.get(node_id)
+        return cache is not None and cache.contains(base)
+
+    def warm_owners(self, base: str) -> int:
+        """Pull ``base``'s WS into every alive owner's L1 (rebalance /
+        post-join warm-up).  Returns the number of owner caches now
+        holding it; no-op when no record exists yet."""
+        if not has_record(base):
+            return 0
+        name = os.path.basename(base)
+        warmed = 0
+        cfg = self.reap                      # the fleet's configured reads
+        for owner in self.owners(name):
+            with self._mu:
+                cache = self.caches.get(owner)
+                up = self._alive.get(owner, False)
+            if cache is None or not up:
+                continue
+            try:
+                cache.fetch(base, cfg)
+                warmed += 1
+            except OSError:
+                continue                 # record dropped mid-warm: skip
+        return warmed
+
+    def reset_stats(self) -> None:
+        """Zero the store's counters and every attached cache's (cache
+        *contents* survive — use each cache's ``clear`` for that)."""
+        with self._mu:
+            self.remote_fetches = self.remote_misses = 0
+            self.origin_reads = self.dead_owner_fallbacks = 0
+            self.transfer_bytes = 0
+            self.transfer_s = 0.0
+            caches = list(self.caches.values())
+        for c in caches:
+            c.reset_stats()
+
+    def stats(self) -> dict:
+        with self._mu:
+            out = {
+                "remote_fetches": self.remote_fetches,
+                "remote_misses": self.remote_misses,
+                "origin_reads": self.origin_reads,
+                "dead_owner_fallbacks": self.dead_owner_fallbacks,
+                "transfer_bytes": self.transfer_bytes,
+                "transfer_s": self.transfer_s,
+                "alive": sorted(n for n, up in self._alive.items() if up),
+            }
+            caches = dict(self.caches)
+        out["nodes"] = {n: c.stats() for n, c in sorted(caches.items())}
+        local = sum(c["hits"] for c in out["nodes"].values())
+        lookups = local + sum(c["misses"] for c in out["nodes"].values())
+        out["local_hit_rate"] = local / lookups if lookups else 0.0
+        return out

@@ -148,20 +148,37 @@ class WSCache:
     snapshots the generation before reading and discards its insert if an
     invalidation bumped it meanwhile (the caller still installs from the
     data it read; only the *cache entry* is suppressed).
+
+    **Tiering hook**: ``source`` replaces the default origin-disk read
+    (:func:`_read_ws`) with an arbitrary ``(base, cfg) -> (pages, data)``
+    callable.  The cluster layer uses this to make a per-node cache
+    *two-tier*: on a local miss, the node's source fetches the WS from its
+    owner shard's cache over a modeled network instead of re-reading the
+    origin disk (snapstore.py).  Single-flight still applies — concurrent
+    local misses trigger exactly one source call.
+
+    The cache is **bounded**: inserts beyond ``capacity_bytes`` evict LRU
+    entries (``evicted`` stat), so a long fleet run over many functions
+    cannot grow the cache without bound.
     """
 
-    def __init__(self, capacity_bytes: int = 512 << 20):
+    def __init__(self, capacity_bytes: int = 512 << 20, *,
+                 source=None):
         self.capacity_bytes = capacity_bytes
+        self.source = source             # None => origin-disk _read_ws
         self._lock = threading.Lock()
         self._entries: dict[str, tuple[float, list[int], bytes]] = {}
         self._inflight: dict[str, threading.Event] = {}
         self._gens: dict[str, int] = {}  # bumped by every invalidation
         self._order: list[str] = []      # LRU order, oldest first
+        self._bytes = 0                  # running total of cached WS bytes
         self.hits = 0
         self.misses = 0
         self.reads = 0                   # underlying WS-file reads performed
         self.invalidations = 0
         self.discarded = 0               # inserts dropped: raced an invalidate
+        self.evicted = 0                 # LRU entries dropped at capacity
+        self.peek_hits = 0               # remote-peer serves via peek()
 
     def _lru_touch(self, base: str) -> None:
         if base in self._order:
@@ -172,11 +189,11 @@ class WSCache:
         # Never evict the newest entry: an entry larger than the whole
         # capacity must survive its own insert so concurrent followers can
         # still hit it (it becomes LRU-oldest and goes on the next insert).
-        used = sum(len(d) for _, _, d in self._entries.values())
-        while used > self.capacity_bytes and len(self._order) > 1:
+        while self._bytes > self.capacity_bytes and len(self._order) > 1:
             victim = self._order.pop(0)
             _, _, data = self._entries.pop(victim)
-            used -= len(data)
+            self._bytes -= len(data)
+            self.evicted += 1
 
     def fetch(self, base: str, cfg: ReapConfig) -> tuple[list[int], bytes, bool]:
         """Return (pages, data, cache_hit) for ``base``'s WS file."""
@@ -199,11 +216,15 @@ class WSCache:
             # follower: wait for the leader's read, then re-check the entry
             ev.wait()
         try:
-            pages, data = _read_ws(base, cfg)
+            pages, data = (self.source or _read_ws)(base, cfg)
             with self._lock:
                 self.reads += 1
                 if self._gens.get(base, 0) == gen:
+                    old = self._entries.get(base)
+                    if old is not None:
+                        self._bytes -= len(old[2])
                     self._entries[base] = (mtime, pages, data)
+                    self._bytes += len(data)
                     self._lru_touch(base)
                     self._evict()
                 else:
@@ -215,6 +236,35 @@ class WSCache:
                 self._gens.pop(base, None)  # no leader left holding a snapshot
             ev.set()
 
+    def contains(self, base: str) -> bool:
+        """Residency probe (no disk I/O, no LRU touch): is a WS entry for
+        ``base`` cached?  The cluster scheduler scores placement locality
+        with this; a stale-mtime entry answering True merely costs one
+        fresh read on the placed node, so staleness is acceptable here."""
+        with self._lock:
+            return base in self._entries
+
+    def peek(self, base: str) -> tuple[list[int], bytes] | None:
+        """Serve ``base`` from a *completed* entry or return None — never
+        joins an in-flight read and never triggers one.  This is the
+        cluster shard tier's remote-serve primitive: a peer peeking an
+        owner's cache can't block on the owner's single-flight event, so
+        cross-node cache waits (and therefore cross-cache deadlock) are
+        impossible by construction.  Freshness is still mtime-checked."""
+        try:
+            mtime = os.path.getmtime(ws_path(base))
+        except OSError:
+            return None                  # record dropped: nothing to serve
+        with self._lock:
+            ent = self._entries.get(base)
+            if ent is None or ent[0] != mtime:
+                return None
+            # counted apart from hits/misses: a peek serves a *peer*, and
+            # folding it into hits would inflate this node's local hit rate
+            self.peek_hits += 1
+            self._lru_touch(base)
+            return ent[1], ent[2]
+
     def invalidate(self, base: str) -> None:
         with self._lock:
             if base in self._inflight:
@@ -223,7 +273,9 @@ class WSCache:
                 # the number of concurrent reads instead of growing with
                 # every base ever invalidated
                 self._gens[base] = self._gens.get(base, 0) + 1
-            if self._entries.pop(base, None) is not None:
+            dropped = self._entries.pop(base, None)
+            if dropped is not None:
+                self._bytes -= len(dropped[2])
                 self.invalidations += 1
             if base in self._order:
                 self._order.remove(base)
@@ -234,19 +286,21 @@ class WSCache:
                 self._gens[base] = self._gens.get(base, 0) + 1
             self._entries.clear()
             self._order.clear()
+            self._bytes = 0
 
     def reset_stats(self) -> None:
         with self._lock:
             self.hits = self.misses = self.reads = 0
-            self.invalidations = self.discarded = 0
+            self.invalidations = self.discarded = self.evicted = 0
+            self.peek_hits = 0
 
     def stats(self) -> dict:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "reads": self.reads, "invalidations": self.invalidations,
-                    "discarded": self.discarded,
-                    "entries": len(self._entries),
-                    "bytes": sum(len(d) for _, _, d in self._entries.values())}
+                    "discarded": self.discarded, "evicted": self.evicted,
+                    "peek_hits": self.peek_hits,
+                    "entries": len(self._entries), "bytes": self._bytes}
 
 
 #: Process-wide singleton (the orchestrator's host-level page cache analogue).
@@ -271,18 +325,20 @@ def prefetch(arena: InstanceArena, base: str, cfg: ReapConfig) -> tuple[int, flo
     return len(pages), time.perf_counter() - t0
 
 
-def prefetch_shared(arena: InstanceArena, base: str,
-                    cfg: ReapConfig) -> tuple[int, float, bool]:
+def prefetch_shared(arena: InstanceArena, base: str, cfg: ReapConfig,
+                    cache: WSCache | None = None) -> tuple[int, float, bool]:
     """Cache-aware prefetch used by the serving data plane.
 
     Concurrent cold-starts of the same function share one WS read through
-    :data:`WS_CACHE`.  Returns (n_pages, seconds, ws_cache_hit).
+    ``cache`` (default: the process-wide :data:`WS_CACHE`; the cluster
+    layer passes each node's own two-tier cache).  Returns
+    (n_pages, seconds, ws_cache_hit).
     """
     if not (cfg.use_ws_file and cfg.share_ws_cache):
         n, secs = prefetch(arena, base, cfg)
         return n, secs, False
     t0 = time.perf_counter()
-    pages, data, hit = WS_CACHE.fetch(base, cfg)
+    pages, data, hit = (cache or WS_CACHE).fetch(base, cfg)
     arena.install_span(pages, data)
     return len(pages), time.perf_counter() - t0, hit
 
@@ -294,12 +350,15 @@ class Monitor:
     the GIL so concurrent instances overlap, cf. Fig. 9)."""
 
     def __init__(self, gm: GuestMemoryFile, base: str, cfg: ReapConfig,
-                 *, mode: str | None = None):
+                 *, mode: str | None = None, cache: WSCache | None = None):
         """``mode``: None => auto (prefetch if a record exists, else record);
-        'vanilla' => ignore records, serve every page as a demand fault."""
+        'vanilla' => ignore records, serve every page as a demand fault.
+        ``cache``: WS page cache for the prefetch (None => process-wide
+        :data:`WS_CACHE`; cluster nodes pass their own tiered cache)."""
         self.gm = gm
         self.base = base
         self.cfg = cfg
+        self.cache = cache
         self.arena = InstanceArena(gm, o_direct=cfg.o_direct)
         self.mode = mode or ("prefetch" if has_record(base) else "record")
         self.prefetched = 0
@@ -309,7 +368,7 @@ class Monitor:
     def start(self) -> None:
         if self.mode == "prefetch":
             self.prefetched, self.prefetch_s, self.ws_cache_hit = (
-                prefetch_shared(self.arena, self.base, self.cfg))
+                prefetch_shared(self.arena, self.base, self.cfg, self.cache))
 
     def finish(self) -> dict:
         """Called when the orchestrator receives the function response."""

@@ -6,7 +6,6 @@ shardable, no allocation) -- the multi-pod dry-run lowers against these.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

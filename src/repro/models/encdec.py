@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..distributed.sharding import act_batch
 from ..nn import layers as nn
-from .transformer import next_token_loss, stack_specs
+from .transformer import stack_specs
 
 
 def enc_layer_spec(cfg: ModelConfig) -> dict:

@@ -16,15 +16,13 @@ dispatch/combine all-to-alls.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..distributed.sharding import act_batch, act_expert
 from ..nn import layers as nn
-from .transformer import (_logits, _trunk_in, next_token_loss, stack_specs)
+from .transformer import _logits, _trunk_in, stack_specs
 
 # ---------------------------------------------------------------------------
 # Specs

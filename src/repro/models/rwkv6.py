@@ -18,7 +18,7 @@ from ..configs.base import ModelConfig
 from ..distributed.sharding import act_batch
 from ..nn import layers as nn
 from ..nn.spec import tensor
-from .transformer import _logits, next_token_loss, stack_specs
+from .transformer import _logits, stack_specs
 
 
 def dims(cfg: ModelConfig):

@@ -6,7 +6,6 @@ homogeneous loop (prereq for scan-level remat + FSDP all-gather overlap).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -15,7 +14,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..distributed.sharding import act_batch, act_logits
 from ..nn import layers as nn
-from ..nn.spec import TensorSpec, map_leaves, tensor
+from ..nn.spec import TensorSpec, map_leaves
 
 # ---------------------------------------------------------------------------
 # Spec construction

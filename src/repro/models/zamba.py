@@ -10,13 +10,12 @@ cached prefix).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..distributed.sharding import act_batch
 from ..nn import layers as nn
 from .mamba2 import apply_mamba2, mamba2_spec, mamba2_state_spec
-from .transformer import _logits, next_token_loss, stack_specs
+from .transformer import _logits, stack_specs
 
 
 def n_groups(cfg: ModelConfig) -> int:

@@ -1,6 +1,7 @@
 from .instance import ExecutableCache, FunctionInstance, State
 from .loadgen import (ClosedLoopGenerator, OpenLoopGenerator, Trace,
-                      TraceEvent, diurnal_trace, poisson_trace, uniform_trace)
+                      TraceEvent, azure_trace, diurnal_trace, poisson_trace,
+                      uniform_trace)
 from .orchestrator import FunctionRecord, Orchestrator
 from .policy import FunctionDemand, PolicyConfig, PrewarmPolicy
 from .router import (AdmissionError, Invocation, Router, RouterClosedError,

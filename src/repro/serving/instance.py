@@ -81,10 +81,12 @@ class FunctionInstance:
 
     def __init__(self, name: str, cfg: ModelConfig, base: str,
                  reap: ReapConfig, *, mode: str = "auto",
-                 prewarmed: bool = False):
+                 prewarmed: bool = False, ws_cache=None):
         """``prewarmed=True`` marks an instance spawned by the control plane
         *off* the invocation path: its load/connect/prefetch costs were paid
-        by a pool thread, so no invocation report ever charges them."""
+        by a pool thread, so no invocation report ever charges them.
+        ``ws_cache`` selects the WS page cache for the REAP prefetch (None
+        => the process-wide default; cluster nodes pass their own)."""
         self.name = name
         self.cfg = cfg
         self.base = base
@@ -99,9 +101,10 @@ class FunctionInstance:
         self.gm = GuestMemoryFile.open(base)
         if mode == "vanilla":
             # baseline: ignore any WS record; always lazy page faults
-            self.monitor = Monitor(self.gm, base, reap, mode="vanilla")
+            self.monitor = Monitor(self.gm, base, reap, mode="vanilla",
+                                   cache=ws_cache)
         else:
-            self.monitor = Monitor(self.gm, base, reap)
+            self.monitor = Monitor(self.gm, base, reap, cache=ws_cache)
         ExecutableCache.get(cfg)
         self.report.load_vmm_s = time.perf_counter() - t0
 

@@ -11,6 +11,9 @@ patterns, so arrivals must be *replayable*):
     mix and modality mix, from a seed.
   * :func:`uniform_trace` synthesizes a deterministic fixed-interval trace
     (``interval_s=0`` => an N-wide concurrent burst, the Fig. 9 shape).
+  * :func:`azure_trace` ingests the Azure Functions 2019
+    invocations-per-minute CSV, mapping the busiest production functions
+    onto registered names (real arrival shapes, compressed in time).
   * :class:`OpenLoopGenerator` replays a trace against a router at wall
     pace: submits happen at each event's offset whether or not earlier
     invocations finished (queueing delay is *measured*, not avoided).
@@ -158,6 +161,74 @@ def diurnal_trace(base_rps: float, peak_rps: float, period_s: float,
     return Trace(events)
 
 
+def azure_trace(path: str, functions: list[str] | None = None, *,
+                duration_s: float | None = None,
+                max_minutes: int | None = None,
+                top_k: int | None = None, seed: int = 0) -> Trace:
+    """Ingest the Azure Functions 2019 invocations-per-minute CSV format.
+
+    Each row is one function: hash-id columns (``HashOwner``, ``HashApp``,
+    ``HashFunction``, ``Trigger``, ...) followed by numeric minute columns
+    ``1..1440`` holding the invocation count in that minute of the day.
+    Parsing is header-driven — any non-numeric leading columns are treated
+    as identity, any numeric header as a minute index — so the 2021 format
+    variants parse too.
+
+    Synthesis: rows are ranked by total invocations and the busiest
+    ``top_k`` kept (default: ``len(functions)`` when a mapping is given,
+    else all rows).  With ``functions`` given, rank *i* maps onto
+    ``functions[i % len(functions)]`` — the production arrival *shape*
+    replayed over this repo's registered function names.  A count of *c*
+    in minute *m* becomes *c* arrivals uniformly placed inside
+    ``[60*m, 60*(m+1))`` by a seeded RNG, so the trace is exact and
+    replayable.  ``duration_s`` rescales the whole timeline (1440 minutes
+    of production traffic compressed into a benchmark window);
+    ``max_minutes`` truncates to the first N minute columns first.
+    """
+    rows: list[tuple[str, list[int]]] = []   # (function id, per-minute counts)
+    with open(path) as f:
+        header = f.readline().rstrip("\n").split(",")
+        minute_cols = [i for i, h in enumerate(header)
+                       if h.strip().lstrip("-").isdigit()]
+        if not minute_cols:
+            raise ValueError(f"{path}: no numeric minute columns in header")
+        if max_minutes is not None:
+            minute_cols = minute_cols[:max_minutes]
+        # identity = every column before the first minute column (columns
+        # interleaved after that point are not supported and would parse
+        # as counts)
+        id_cols = list(range(minute_cols[0]))
+        for line in f:
+            cells = line.rstrip("\n").split(",")
+            if len(cells) <= minute_cols[0]:
+                continue                     # blank/short line
+            fid = "/".join(cells[i] for i in id_cols) or f"row{len(rows)}"
+            counts = [int(float(cells[i])) if i < len(cells) and cells[i]
+                      else 0 for i in minute_cols]
+            rows.append((fid, counts))
+    if not rows:
+        raise ValueError(f"{path}: no function rows")
+    rows.sort(key=lambda r: (-sum(r[1]), r[0]))  # busiest first, stable
+    k = top_k if top_k is not None else (len(functions) if functions
+                                         else len(rows))
+    rows = rows[:max(k, 1)]
+
+    span_s = 60.0 * max(len(c) for _, c in rows)
+    scale = 1.0 if duration_s is None else duration_s / span_s
+    rng = np.random.default_rng(seed)
+    events: list[TraceEvent] = []
+    for rank, (fid, counts) in enumerate(rows):
+        name = (functions[rank % len(functions)] if functions else fid)
+        for m, c in enumerate(counts):
+            if c <= 0:
+                continue
+            for t in rng.uniform(60.0 * m, 60.0 * (m + 1), size=c):
+                events.append(TraceEvent(t=float(t) * scale, function=name,
+                                         seed=int(rng.integers(0, 2**31))))
+    events.sort(key=lambda e: e.t)
+    return Trace(events)
+
+
 #: Maps one trace event to a request payload for its function.
 BatchFactory = Callable[[TraceEvent], dict]
 
@@ -178,7 +249,13 @@ class OpenLoopGenerator:
         self.speedup = speedup
 
     def run(self) -> list[tuple[TraceEvent, ColdStartReport | None]]:
-        """Returns (event, report) per event; report None when rejected."""
+        """Returns (event, report) per event; report None when throttled.
+
+        A throttle is a measured outcome, never an abort — whether it
+        happens at submit time or later (a cluster rerouting a failed
+        node's queue may find every survivor full and fail the future
+        with :class:`AdmissionError` at result time).
+        """
         pending: list[tuple[TraceEvent, object]] = []
         rejected: list[TraceEvent] = []
         t0 = time.perf_counter()
@@ -194,7 +271,10 @@ class OpenLoopGenerator:
                 rejected.append(ev)
         out: list[tuple[TraceEvent, ColdStartReport | None]] = []
         for ev, inv in pending:
-            out.append((ev, inv.result()[1]))
+            try:
+                out.append((ev, inv.result()[1]))
+            except AdmissionError:
+                rejected.append(ev)
         out.extend((ev, None) for ev in rejected)
         return out
 

@@ -60,11 +60,17 @@ class FunctionRecord:
 class Orchestrator:
     def __init__(self, store_dir: str, *, reap: ReapConfig | None = None,
                  mode: str = "reap", keepalive_s: float = 60.0,
-                 warm_limit: int = 8, prewarm_concurrency: int = 4):
-        """mode: 'reap' (record+prefetch) | 'vanilla' (baseline snapshots)."""
+                 warm_limit: int = 8, prewarm_concurrency: int = 4,
+                 ws_cache=None):
+        """mode: 'reap' (record+prefetch) | 'vanilla' (baseline snapshots).
+        ``ws_cache``: WS page cache every instance prefetches through (None
+        => process-wide default; a cluster WorkerNode passes its own
+        two-tier cache so restores resolve local-hit / remote-fetch /
+        origin-disk)."""
         self.store_dir = store_dir
         self.reap = reap or ReapConfig()
         self.mode = mode
+        self.ws_cache = ws_cache
         self.keepalive_s = keepalive_s
         self.warm_limit = warm_limit
         self.prewarm_concurrency = prewarm_concurrency
@@ -127,6 +133,15 @@ class Orchestrator:
             if min_warm is not None:
                 rec.min_warm = min_warm
 
+    def idle_count(self, name: str) -> int:
+        """Warm instances currently parked for ``name`` (0 if unknown) —
+        the cluster scheduler's warm-availability signal."""
+        rec = self.functions.get(name)
+        if rec is None:
+            return 0
+        with rec.lock:
+            return len(rec.idle)
+
     def prewarm(self, name: str, n: int, *, wait: bool = False) -> int:
         """Pre-spawn up to ``n`` warm instances of ``name`` on pool threads.
 
@@ -183,7 +198,8 @@ class Orchestrator:
         try:
             mode = "vanilla" if self.mode == "vanilla" else "auto"
             inst = FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
-                                    mode=mode, prewarmed=True)
+                                    mode=mode, prewarmed=True,
+                                    ws_cache=self.ws_cache)
             inst.make_warm()         # params memory-resident before any arrival
             if inst.monitor.mode == "record":
                 # No WS record existed yet (function was never cold-invoked):
@@ -273,7 +289,7 @@ class Orchestrator:
                     # lost a race with a reaper; instance is already dead
         mode = "vanilla" if self.mode == "vanilla" else "auto"
         inst = FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
-                                mode=mode)
+                                mode=mode, ws_cache=self.ws_cache)
         inst.try_acquire()
         with rec.lock:
             rec.n_spawned += 1

@@ -1,0 +1,66 @@
+"""Azure Functions 2019 invocations-per-minute CSV ingestion."""
+import os
+
+import pytest
+
+from repro.serving import Trace, azure_trace
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "azure_sample.csv")
+
+# fixture row totals: f_hot=113, f_warm=18, f_periodic=4, f_rare=1, f_idle=0
+HOT, WARM, PERIODIC, RARE = 113, 18, 4, 1
+
+
+def test_parses_counts_into_events():
+    tr = azure_trace(FIXTURE)
+    assert isinstance(tr, Trace)
+    assert len(tr.events) == HOT + WARM + PERIODIC + RARE  # f_idle drops out
+    # function ids come from the hash columns
+    per_fn = {}
+    for e in tr.events:
+        per_fn[e.function] = per_fn.get(e.function, 0) + 1
+    assert per_fn["o1/appA/f_hot/http"] == HOT
+    assert per_fn["o2/appB/f_rare/queue"] == RARE
+    # arrivals are ordered and live inside the 10-minute span
+    assert all(0 <= e.t <= 600 for e in tr.events)
+    assert all(tr.events[i].t <= tr.events[i + 1].t
+               for i in range(len(tr.events) - 1))
+
+
+def test_maps_busiest_rows_onto_registered_functions():
+    names = ["fn_a", "fn_b", "fn_c"]
+    tr = azure_trace(FIXTURE, functions=names, seed=3)
+    per_fn = {}
+    for e in tr.events:
+        per_fn[e.function] = per_fn.get(e.function, 0) + 1
+    # rank order: busiest azure row -> first registered name
+    assert per_fn == {"fn_a": HOT, "fn_b": WARM, "fn_c": PERIODIC}
+
+
+def test_duration_rescale_and_minute_cap():
+    tr = azure_trace(FIXTURE, functions=["f"], duration_s=5.0)
+    assert all(0 <= e.t <= 5.0 for e in tr.events)
+    assert len(tr.events) == HOT                      # top-1 row only
+    tr2 = azure_trace(FIXTURE, functions=["f"], max_minutes=3)
+    assert len(tr2.events) == 12 + 8 + 15              # f_hot's first 3 min
+    assert all(e.t <= 180 for e in tr2.events)
+
+
+def test_replayable_and_roundtrips(tmp_path):
+    t1 = azure_trace(FIXTURE, functions=["a", "b"], duration_s=4.0, seed=9)
+    t2 = azure_trace(FIXTURE, functions=["a", "b"], duration_s=4.0, seed=9)
+    assert t1.events == t2.events                      # seeded => replayable
+    p = str(tmp_path / "azure.json")
+    t1.save(p)
+    assert Trace.load(p).events == t1.events
+
+
+def test_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.csv"
+    bad.write_text("HashOwner,HashApp,Trigger\n")      # no minute columns
+    with pytest.raises(ValueError):
+        azure_trace(str(bad))
+    empty = tmp_path / "empty.csv"
+    empty.write_text("HashOwner,1,2,3\n")              # header only, no rows
+    with pytest.raises(ValueError):
+        azure_trace(str(empty))

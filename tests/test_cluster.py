@@ -1,0 +1,463 @@
+"""Cluster layer: consistent-hash ring, sharded two-tier snapshot store,
+locality-aware scheduling, node-failure rerouting, ring rebalance."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterRouter, ConsistentHashRing, ScheduleConfig,
+                           ShardedSnapshotStore, TransferModel, WorkerNode,
+                           build_fleet)
+from repro.core.arena import PAGE
+from repro.core.reap import ReapConfig, trace_path, ws_path
+
+
+# -- consistent-hash ring -------------------------------------------------
+
+KEYS = [f"fn-{i}" for i in range(2000)]
+
+
+def owners_of(ring, keys):
+    return {k: ring.owner(k) for k in keys}
+
+
+def test_ring_balance_across_nodes():
+    """Virtual nodes spread 2000 keys over 8 hosts without hot-spotting:
+    every host owns a share within 3x of fair."""
+    ring = ConsistentHashRing([f"node-{i}" for i in range(8)], vnodes=64)
+    counts = {}
+    for k in KEYS:
+        counts[ring.owner(k)] = counts.get(ring.owner(k), 0) + 1
+    assert len(counts) == 8                      # every node owns keys
+    fair = len(KEYS) / 8
+    for n, c in counts.items():
+        assert fair / 3 <= c <= fair * 3, (n, c)
+
+
+def test_ring_lookup_is_stable_and_distinct():
+    ring = ConsistentHashRing(["a", "b", "c", "d"], vnodes=32)
+    for k in KEYS[:50]:
+        owners = ring.lookup(k, 3)
+        assert len(owners) == len(set(owners)) == 3
+        assert owners == ring.lookup(k, 3)       # deterministic
+        assert owners[0] == ring.owner(k)
+    # insertion order must not matter
+    ring2 = ConsistentHashRing(["d", "b", "a", "c"], vnodes=32)
+    assert owners_of(ring, KEYS[:200]) == owners_of(ring2, KEYS[:200])
+
+
+def test_ring_join_moves_minimal_keys_to_the_joiner():
+    ring = ConsistentHashRing([f"node-{i}" for i in range(5)], vnodes=64)
+    before = owners_of(ring, KEYS)
+    ring.add("node-5")
+    after = owners_of(ring, KEYS)
+    moved = [k for k in KEYS if before[k] != after[k]]
+    # every moved key moved *to* the joiner, never between old nodes
+    assert all(after[k] == "node-5" for k in moved)
+    # ~1/6 of the keyspace expected; far below a full rehash
+    assert 0 < len(moved) / len(KEYS) < 0.45
+
+
+def test_ring_leave_moves_only_the_victims_keys():
+    ring = ConsistentHashRing([f"node-{i}" for i in range(5)], vnodes=64)
+    before = owners_of(ring, KEYS)
+    ring.remove("node-2")
+    after = owners_of(ring, KEYS)
+    for k in KEYS:
+        if before[k] == "node-2":
+            assert after[k] != "node-2"          # redistributed
+        else:
+            assert after[k] == before[k]         # untouched
+    assert "node-2" not in ring and len(ring) == 4
+
+
+def test_ring_replicas_promote_on_primary_death():
+    """lookup(k, r)[1:] are the fallback owners: removing the primary makes
+    exactly them the new owner list."""
+    ring = ConsistentHashRing(["a", "b", "c", "d"], vnodes=64)
+    for k in KEYS[:100]:
+        first, rest = ring.lookup(k, 3)[0], ring.lookup(k, 3)[1:]
+        ring.remove(first)
+        assert ring.lookup(k, 2) == rest
+        ring.add(first)
+
+
+def test_ring_empty_and_small():
+    ring = ConsistentHashRing(vnodes=8)
+    assert ring.lookup("x", 2) == [] and ring.owner("x") is None
+    ring.add("only")
+    assert ring.lookup("x", 3) == ["only"]       # n capped at ring size
+
+
+# -- sharded snapshot store (no models: fabricated WS records) ------------
+
+def make_record(tmp_path, name: str, n_pages: int = 4) -> str:
+    """Write a fake WS record (trace + ws file) for ``name``."""
+    base = str(tmp_path / name)
+    pages = np.arange(n_pages, dtype=np.int64)
+    np.save(trace_path(base), pages)
+    with open(ws_path(base), "wb") as f:
+        f.write(bytes([65 + n_pages % 26]) * (n_pages * PAGE))
+    return base
+
+
+@pytest.fixture()
+def store2(tmp_path):
+    """Two-node store with a no-op sleep (costs recorded, not paid)."""
+    ring = ConsistentHashRing(vnodes=32)
+    slept = []
+    store = ShardedSnapshotStore(ring, transfer=TransferModel(1e-3, 1.0),
+                                 reap=ReapConfig(o_direct=False),
+                                 sleep=slept.append)
+    caches = {n: store.attach(n) for n in ("na", "nb")}
+    return store, caches, slept, tmp_path
+
+
+def test_two_tier_fetch_local_remote_origin(store2):
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fn", n_pages=3)
+    owner = store.owners("fn")[0]
+    other = "nb" if owner == "na" else "na"
+    cfg = ReapConfig(o_direct=False)
+
+    assert store.warm_owners(base) == 1       # owner shard reads origin once
+    assert store.stats()["origin_reads"] == 1
+
+    # non-owner miss: remote fetch from the warm owner shard
+    pages, data, hit = caches[other].fetch(base, cfg)
+    assert not hit and len(data) == 3 * PAGE and pages == [0, 1, 2]
+    s = store.stats()
+    assert s["remote_fetches"] == 1 and s["origin_reads"] == 1
+    assert s["transfer_bytes"] == 3 * PAGE
+    assert slept == [store.transfer.cost_s(3 * PAGE)]  # modeled cost charged
+    assert store.resident(other, base)        # installed locally
+
+    # second fetch on the non-owner: pure local hit, no new traffic
+    _, _, hit = caches[other].fetch(base, cfg)
+    assert hit
+    s = store.stats()
+    assert s["remote_fetches"] == 1 and s["origin_reads"] == 1
+    assert s["local_hit_rate"] > 0
+
+
+def test_cold_owner_does_not_serve_remote(store2):
+    """An owner whose cache is cold cannot serve a peer: the requester
+    reads origin itself (counted remote_misses) and the owner's cache is
+    NOT populated on its behalf — peeks never join or trigger reads on
+    another node's cache, which is what makes cross-cache deadlock
+    impossible."""
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fncold", n_pages=2)
+    owner = store.owners("fncold")[0]
+    other = "nb" if owner == "na" else "na"
+    _, data, hit = caches[other].fetch(base, ReapConfig(o_direct=False))
+    assert not hit and len(data) == 2 * PAGE
+    s = store.stats()
+    assert s["remote_fetches"] == 0 and s["remote_misses"] == 1
+    assert s["origin_reads"] == 1 and slept == []
+    assert store.resident(other, base)
+    assert not store.resident(owner, base)
+
+
+def test_owner_fetch_goes_straight_to_origin(store2):
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fn2", n_pages=2)
+    owner = store.owners("fn2")[0]
+    _, _, hit = caches[owner].fetch(base, ReapConfig(o_direct=False))
+    assert not hit
+    s = store.stats()
+    assert s["origin_reads"] == 1 and s["remote_fetches"] == 0
+    assert slept == []                         # no network modeled
+
+
+def test_dead_owner_falls_back_to_origin(store2):
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fn3", n_pages=2)
+    owner = store.owners("fn3")[0]
+    other = "nb" if owner == "na" else "na"
+    store.set_alive(owner, False)
+    # the ring dropped the dead node, so the survivor is now the owner and
+    # reads origin; either way the fetch succeeds without the dead host
+    _, data, _ = caches[other].fetch(base, ReapConfig(o_direct=False))
+    assert len(data) == 2 * PAGE
+    s = store.stats()
+    assert s["origin_reads"] == 1 and s["remote_fetches"] == 0
+    assert s["alive"] == [other]
+
+
+def test_dead_owner_fallback_counts_when_ring_keeps_owner(store2):
+    """If the owner is marked dead in the store but still on the ring (a
+    failure window before membership converges), the fetch falls back to
+    origin and counts it."""
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fn4", n_pages=2)
+    owner = store.owners("fn4")[0]
+    other = "nb" if owner == "na" else "na"
+    with store._mu:
+        store._alive[owner] = False            # dead, but ring unchanged
+    _, data, _ = caches[other].fetch(base, ReapConfig(o_direct=False))
+    assert len(data) == 2 * PAGE
+    s = store.stats()
+    assert s["dead_owner_fallbacks"] == 1 and s["origin_reads"] == 1
+
+
+def test_replication_factor_for_hot_functions(store2):
+    store, caches, slept, tmp = store2
+    assert len(store.owners("hot")) == 1
+    store.set_replication("hot", 2)
+    owners = store.owners("hot")
+    assert len(owners) == 2 == len(set(owners))
+    with pytest.raises(ValueError):
+        store.set_replication("hot", 0)
+
+
+def test_warm_owners_installs_into_owner_caches(store2):
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fn5", n_pages=2)
+    store.set_replication("fn5", 2)
+    assert store.warm_owners(base) == 2
+    for owner in store.owners("fn5"):
+        assert store.resident(owner, base)
+    assert store.warm_owners(str(tmp / "no_record")) == 0
+
+
+def test_transfer_model_cost():
+    tm = TransferModel(latency_s=1e-3, gbps=8.0)
+    assert tm.cost_s(0) == pytest.approx(1e-3)
+    # 1 GB at 8 Gb/s = 1 s + latency
+    assert tm.cost_s(10 ** 9) == pytest.approx(1.0 + 1e-3)
+    assert tm.cost_pages(2) == pytest.approx(tm.cost_s(2 * PAGE))
+
+
+def test_concurrent_nonowner_misses_single_flight(store2):
+    """Concurrent misses on one node issue one remote fetch."""
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fn6", n_pages=2)
+    owner = store.owners("fn6")[0]
+    other = "nb" if owner == "na" else "na"
+    cfg = ReapConfig(o_direct=False)
+    store.warm_owners(base)                   # owner shard can serve
+    results = []
+    threads = [threading.Thread(
+        target=lambda: results.append(caches[other].fetch(base, cfg)))
+        for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(10)
+    assert len(results) == 4
+    assert store.stats()["remote_fetches"] == 1   # single-flight held
+    assert sum(1 for _, _, hit in results if hit) == 3
+
+
+def test_ring_flip_mid_fetch_does_not_deadlock(store2, monkeypatch):
+    """Ownership flipping while a shard fetch is in flight must not create
+    a wait cycle.  The remote tier peeks completed entries only — it never
+    joins another cache's in-flight read — so whichever way the ring flips
+    mid-fetch, the requester resolves at origin instead of blocking."""
+    store, caches, slept, tmp = store2
+    base = make_record(tmp, "fnx", n_pages=2)
+    owner = store.owners("fnx")[0]
+    other = "nb" if owner == "na" else "na"
+    calls = []
+
+    def flipping(name):                     # owner -> requester mid-chain
+        calls.append(name)
+        return [owner] if len(calls) == 1 else [other]
+
+    monkeypatch.setattr(store, "owners", flipping)
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.update(
+            r=caches[other].fetch(base, ReapConfig(o_direct=False))),
+        daemon=True)
+    t.start()
+    t.join(10)
+    assert not t.is_alive(), "shard fetch deadlocked on its own event"
+    pages, data, hit = out["r"]
+    assert len(data) == 2 * PAGE and not hit
+    assert store.stats()["origin_reads"] >= 1
+
+
+# -- fleet integration (real serving stack, smoke-sized model) -------------
+
+@pytest.fixture(scope="module")
+def fleet(tmp_path_factory):
+    import jax
+    from repro.configs import SMOKES
+    from repro.launch import steps
+
+    store_dir = str(tmp_path_factory.mktemp("cstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(0))
+    cluster = build_fleet(
+        3, store_dir, cfg=ScheduleConfig(placement="locality"),
+        transfer=TransferModel(latency_s=1e-4, gbps=10.0),
+        max_concurrency=2, max_instances_per_function=2, mode="reap",
+        reap=ReapConfig(o_direct=False))
+    cluster.register("cfn", cfg, seed=0, warmup_batch=batch)
+    cluster.register("cfn2", cfg, seed=1)
+    # record phase: one cold invocation each writes the WS record
+    for name in ("cfn", "cfn2"):
+        _, rep = cluster.invoke(name, batch)
+        assert rep.processing_s > 0
+    yield cluster, batch
+    cluster.close()
+
+
+def test_locality_placement_sticks_to_the_warm_node(fleet):
+    cluster, batch = fleet
+    _, rep = cluster.invoke("cfn", batch)
+    warm_node = max(cluster.nodes.values(),
+                    key=lambda n: n.warm_count("cfn")).node_id
+    for _ in range(3):
+        cinv = cluster.submit("cfn", batch)
+        out, rep = cinv.result(timeout=120)
+        assert cinv.node_id == warm_node        # warm signal dominates
+        assert rep.load_vmm_s == 0              # served warm, no restore
+
+
+def test_nonowner_cold_start_remote_fetches_then_is_resident(fleet):
+    cluster, batch = fleet
+    name = "cfn2"
+    cluster.rebalance()                       # owner shards hold the WS
+    owners = cluster.store.owners(name)
+    non_owner = next(n for n in cluster.nodes.values()
+                     if n.node_id not in owners)
+    before = cluster.store.stats()["remote_fetches"]
+    inv = non_owner.submit(name, batch, force_cold=True)
+    _, rep = inv.result(120)
+    assert rep.n_prefetched_pages > 0           # REAP prefetch engaged
+    assert cluster.store.stats()["remote_fetches"] >= before + 1
+    assert non_owner.ws_resident(name)          # L1 installed for next time
+    # and the next cold start on the same node is a pure local hit
+    before = cluster.store.stats()["remote_fetches"]
+    _, rep2 = non_owner.submit(name, batch, force_cold=True).result(120)
+    assert rep2.ws_cache_hit
+    assert cluster.store.stats()["remote_fetches"] == before
+
+
+def test_node_kill_reroutes_queued_invocations(tmp_path_factory):
+    """Kill the node holding a queue mid-burst: every future resolves, the
+    queued remainder reroutes to survivors, nothing hangs."""
+    import jax
+    from repro.configs import SMOKES
+    from repro.launch import steps
+
+    store_dir = str(tmp_path_factory.mktemp("kstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(1))
+    # w_load=0 keeps the queue pinned to one node so the kill has a backlog
+    cluster = build_fleet(
+        3, store_dir, cfg=ScheduleConfig(placement="locality", w_load=0.0),
+        transfer=TransferModel(latency_s=1e-4, gbps=10.0),
+        max_concurrency=1, max_instances_per_function=1, mode="reap",
+        reap=ReapConfig(o_direct=False))
+    cluster.register("kfn", cfg, seed=0, warmup_batch=batch)
+    _, _ = cluster.invoke("kfn", batch)          # record + warm one node
+    victim = max(cluster.nodes.values(),
+                 key=lambda n: n.warm_count("kfn")).node_id
+
+    # force_cold serializes real restore work behind one worker: the burst
+    # is still queued on the victim when the kill lands
+    invs = [cluster.submit("kfn", batch, force_cold=True) for _ in range(8)]
+    assert all(inv.node_id == victim for inv in invs)   # locality pinned
+    cluster.kill_node(victim)
+    placements_at_kill = dict(cluster.stats()["placements"])
+    reports = []
+    for inv in invs:
+        out, rep = inv.result(timeout=120)       # resolves: served or rerouted
+        reports.append(rep)
+    assert len(reports) == 8
+    assert all(r.processing_s > 0 for r in reports)
+    assert cluster.n_rerouted >= 1
+    rerouted = [inv for inv in invs if len(inv.node_ids) > 1]
+    assert rerouted and all(inv.node_ids[0] == victim
+                            and inv.node_ids[-1] != victim
+                            for inv in rerouted)
+    # the dead node took no further placements
+    assert not cluster.nodes[victim].alive
+    _, rep = cluster.invoke("kfn", batch)
+    assert (cluster.stats()["placements"][victim]
+            == placements_at_kill[victim])
+    cluster.close()
+
+
+def test_rebalance_warms_new_owners(fleet):
+    cluster, batch = fleet
+    warmed = cluster.rebalance()
+    assert set(warmed) == {"cfn", "cfn2"}
+    for name in warmed:
+        owners = [o for o in cluster.store.owners(name)
+                  if cluster.store.is_alive(o)]
+        assert warmed[name] == len(owners)
+        for o in owners:
+            assert cluster.store.resident(
+                o, os.path.join(cluster.nodes[o].orch.store_dir, name))
+
+
+def test_join_registers_functions_and_rebalances(fleet):
+    cluster, batch = fleet
+    node_id = "node-late"
+    node = WorkerNode(node_id, cluster.nodes["node-0"].orch.store_dir,
+                      max_concurrency=2, reap=ReapConfig(o_direct=False))
+    cluster.add_node(node)                    # attaches the L1 cache itself
+    assert node.ws_cache is cluster.store.caches[node_id]
+    assert node.orch.ws_cache is node.ws_cache
+    assert node_id in cluster.store.ring
+    assert set(node.orch.functions) == {"cfn", "cfn2"}  # catalog replayed
+    # the joiner serves traffic placed on it directly
+    _, rep = node.submit("cfn", batch).result(120)
+    assert rep.processing_s > 0
+
+
+def test_cluster_admission_error_only_when_every_node_full(tmp_path):
+    """Fleet-wide admission: one full queue falls through to other nodes."""
+    from repro.cluster.scheduler import ClusterRouter
+    from repro.serving import AdmissionError
+
+    class StubRouter:
+        def __init__(self, depth):
+            self.depth = depth
+            self.n = 0
+
+        def submit(self, name, batch, force_cold=False):
+            if self.n >= self.depth:
+                raise AdmissionError("full")
+            self.n += 1
+            return f"inv-{self.n}"
+
+        def stats(self):
+            return {"queued": {}, "inflight": {}}
+
+    class StubNode:
+        def __init__(self, node_id, depth):
+            self.node_id = node_id
+            self.alive = True
+            self.capacity = 1
+            self.router = StubRouter(depth)
+
+        def register(self, *a, **k):
+            pass
+
+        def submit(self, name, batch, force_cold=False):
+            return self.router.submit(name, batch, force_cold)
+
+        def load(self):
+            return self.router.n
+
+        def warm_count(self, name):
+            return 0
+
+        def ws_resident(self, name):
+            return False
+
+    a, b = StubNode("a", 1), StubNode("b", 1)
+    cluster = ClusterRouter([a, b], cfg=ScheduleConfig(placement="locality"))
+    assert cluster.submit("f", {}) is not None
+    assert cluster.submit("f", {}) is not None   # second lands on the other
+    assert a.router.n == b.router.n == 1
+    with pytest.raises(AdmissionError):
+        cluster.submit("f", {})                  # now every queue is full
+    assert cluster.n_rejected == 1

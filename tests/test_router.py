@@ -272,6 +272,54 @@ def test_ws_cache_insert_survives_unrelated_invalidation(tmp_path,
     assert hit                        # entry survived, second fetch is a hit
 
 
+def test_ws_cache_capacity_evicts_lru(tmp_path, monkeypatch):
+    """The cache is bounded: inserts beyond capacity evict oldest-first and
+    count into the ``evicted`` stat, so a long fleet run over many
+    functions cannot grow it without bound."""
+    from repro.core import reap as reap_mod
+    cache = reap_mod.WSCache(capacity_bytes=2 * 4096)
+    bases = [str(tmp_path / f"f{i}") for i in range(3)]
+    for b in bases:
+        with open(reap_mod.ws_path(b), "wb") as f:
+            f.write(b"x")                                # only mtime matters
+    monkeypatch.setattr(reap_mod, "_read_ws",
+                        lambda b, cfg: ([0], b"D" * 4096))
+    for b in bases:
+        cache.fetch(b, ReapConfig())
+    s = cache.stats()
+    assert s["evicted"] == 1 and s["entries"] == 2
+    assert s["bytes"] <= 2 * 4096
+    # LRU: the first-inserted base was the victim; the newest two still hit
+    reads0 = s["reads"]
+    assert cache.fetch(bases[1], ReapConfig())[2]
+    assert cache.fetch(bases[2], ReapConfig())[2]
+    assert not cache.fetch(bases[0], ReapConfig())[2]    # evicted => re-read
+    assert cache.stats()["reads"] == reads0 + 1
+    cache.reset_stats()
+    assert cache.stats()["evicted"] == 0
+
+
+def test_ws_cache_source_hook_overrides_origin_read(tmp_path):
+    """The tiering hook: a cache built with ``source=`` resolves misses
+    through it (single-flight) instead of the origin-disk read."""
+    from repro.core import reap as reap_mod
+    calls = []
+
+    def source(base, cfg):
+        calls.append(base)
+        return [0, 1], b"S" * 8192
+
+    cache = reap_mod.WSCache(source=source)
+    base = str(tmp_path / "f")
+    with open(reap_mod.ws_path(base), "wb") as f:
+        f.write(b"x")
+    pages, data, hit = cache.fetch(base, ReapConfig())
+    assert not hit and pages == [0, 1] and data == b"S" * 8192
+    _, _, hit = cache.fetch(base, ReapConfig())
+    assert hit and calls == [base]                       # one source call
+    assert cache.contains(base) and not cache.contains(base + "2")
+
+
 def test_trace_roundtrip_and_determinism(tmp_path):
     tr1 = poisson_trace(rate_rps=50, duration_s=2.0,
                         functions=["a", "b"], mix={"a": 3, "b": 1},
