@@ -20,6 +20,13 @@ Experiments (identical replayed traces across arms):
   * **Node-kill drill** — replay the trace and kill one node at 40% of the
     timeline: every accepted invocation must still resolve (served,
     rerouted, or counted rejected) with no hung futures.
+  * **Demand-plane A/B** — replay a two-cycle diurnal ramp with per-node
+    adaptive policies, with and without the fleet DemandAggregator
+    (cluster/demand.py).  With it, every node's arrivals merge into
+    per-function forecasts pushed to the *owner shards*, so when cycle 2's
+    ramp spills the hot functions beyond their home node, the spillover
+    placements land on already-prewarmed replicas (``prewarmed=True``)
+    instead of paying cold starts.
 
 ``--quick`` (CI) runs 4 nodes x 6 smoke functions and writes a
 ``BENCH_cluster.json`` artifact next to ``BENCH_scalability.json``.
@@ -40,7 +47,8 @@ ARTIFACT = os.path.join(common.ROOT, "BENCH_cluster.json")
 
 
 def _build_cluster(store_dir, cfg, names, request, *, n_nodes, placement,
-                   quick):
+                   quick, demand=None, max_instances_per_function=2,
+                   replication=1):
     from repro.cluster import ScheduleConfig, TransferModel, build_fleet
     from repro.serving import PolicyConfig
 
@@ -49,9 +57,11 @@ def _build_cluster(store_dir, cfg, names, request, *, n_nodes, placement,
     cluster = build_fleet(
         n_nodes, store_dir,
         cfg=ScheduleConfig(placement=placement, seed=42),
+        demand=demand, replication=replication,
         transfer=TransferModel(latency_s=1e-3, gbps=1.0),
         cache_capacity_bytes=256 << 20,
-        max_concurrency=2, max_instances_per_function=2,
+        max_concurrency=2,
+        max_instances_per_function=max_instances_per_function,
         keepalive_s=2.0, warm_limit=4,
         policy=PolicyConfig(interval_s=0.05, window_s=2.0, max_warm=4,
                             min_keepalive_s=0.5))
@@ -255,10 +265,143 @@ def run_node_kill(function: str = "olmo-1b", *, quick: bool = False,
     return out
 
 
-def write_artifact(ab: dict, kill: dict) -> None:
+def _replay_with_placements(cluster, trace, request):
+    """Open-loop replay that records *where* each event was served.
+    Returns (event, report|None, node_id|None) triples — the per-node
+    attribution the spillover analysis needs and the generic
+    OpenLoopGenerator does not expose."""
+    import time as _time
+
+    from repro.serving import AdmissionError
+    pending = []
+    t0 = _time.perf_counter()
+    for ev in trace.events:
+        delay = ev.t - (_time.perf_counter() - t0)
+        if delay > 0:
+            _time.sleep(delay)
+        try:
+            pending.append((ev, cluster.submit(ev.function, request)))
+        except AdmissionError:
+            pending.append((ev, None))
+    out = []
+    for ev, cinv in pending:
+        if cinv is None:
+            out.append((ev, None, None))
+            continue
+        try:
+            _, rep = cinv.result(timeout=120)
+            out.append((ev, rep, cinv.node_ids[-1]))
+        except AdmissionError:
+            out.append((ev, None, None))
+    return out
+
+
+def _spillover_metrics(placed, names, *, ramp_at_s, label, verbose) -> dict:
+    """Spillover = an event served on a node other than its function's
+    *home* (the node that served it most before the ramp).  The question
+    the demand plane answers: when cycle 2's ramp pushes a function past
+    its home node, is the replica it lands on already warm?"""
+    home: dict[str, str] = {}
+    for name in names:
+        counts: dict[str, int] = {}
+        for ev, rep, node in placed:
+            if node is not None and ev.function == name and ev.t < ramp_at_s:
+                counts[node] = counts.get(node, 0) + 1
+        if counts:
+            home[name] = max(sorted(counts), key=lambda n: counts[n])
+    window = [(ev, rep, node) for ev, rep, node in placed
+              if ev.t >= ramp_at_s and rep is not None]
+    spill = [(ev, rep) for ev, rep, node in window
+             if home.get(ev.function) not in (None, node)]
+    served = [rep for _, rep, _ in window]
+    out = {
+        "post_ramp_served": len(served),
+        "post_ramp_cold": sum(1 for r in served if r.load_vmm_s > 0),
+        "post_ramp_prewarmed": sum(1 for r in served if r.prewarmed),
+        "spillover_served": len(spill),
+        "spillover_prewarmed": sum(1 for _, r in spill if r.prewarmed),
+        "spillover_cold": sum(1 for _, r in spill if r.load_vmm_s > 0),
+        "spillover_warm_fraction": round(
+            sum(1 for _, r in spill if r.load_vmm_s == 0)
+            / max(len(spill), 1), 4),
+    }
+    if verbose:
+        print(f"  {label:22s} post-ramp served={out['post_ramp_served']:3d} "
+              f"cold={out['post_ramp_cold']:3d} "
+              f"spillover={out['spillover_served']:3d} "
+              f"(prewarmed={out['spillover_prewarmed']}, "
+              f"cold={out['spillover_cold']})")
+    return out
+
+
+def run_demand_ab(function: str = "olmo-1b", *, quick: bool = False,
+                  n_nodes: int = 4, verbose: bool = True) -> dict:
+    """Fleet demand plane A/B: per-node adaptive policies alone vs the
+    same fleet with the DemandAggregator pushing owner-shard forecasts."""
+    from repro.cluster import DemandConfig
+    from repro.configs import SMOKES
+    from repro.serving import ForecastConfig, diurnal_trace
+
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
+    store_dir = common.ensure_store()
+    request = common.make_request(cfg, seed=1)
+    prefix = "dmq" if quick else "dm"
+    n_fns = 6 if quick else 10
+    names = [f"{prefix}_{function}_{i}" for i in range(n_fns)]
+    dur = 4.0 if quick else 8.0
+    mix = {n: 1.0 / (i + 1) for i, n in enumerate(names)}
+    # two diurnal cycles: cycle 1 teaches the fleet forecast, cycle 2's
+    # ramp is what must land prewarmed.  The peak is overdriven (plus
+    # bursts riding the sinusoid) so the hot functions' instantaneous
+    # concurrency exceeds one node's single instance and placement *must*
+    # spill — the question the A/B answers is what the spillover finds.
+    trace = diurnal_trace(base_rps=1.0, peak_rps=15.0 * n_fns,
+                          period_s=dur / 2, duration_s=dur,
+                          functions=names, mix=mix,
+                          burst_rps=10.0 * n_fns, burst_every_s=dur / 4,
+                          burst_len_s=0.1, seed=33)
+
+    out: dict = {"n_nodes": n_nodes, "n_functions": n_fns,
+                 "ramp_at_s": dur / 2}
+    if verbose:
+        print(f"\n-- demand-plane A/B: diurnal x2 cycles "
+              f"({len(trace.events)} arrivals over {dur:.0f}s, "
+              f"{n_nodes} nodes x {n_fns} fns) --")
+    for arm in ("off", "on"):
+        demand = None
+        if arm == "on":
+            demand = DemandConfig(
+                interval_s=0.05, hint_ttl_s=1.0, headroom=2.0,
+                forecast=ForecastConfig(
+                    bin_s=0.1, history_s=dur + 2.0, min_period_s=0.5,
+                    max_period_s=dur, lookahead_s=0.4,
+                    period_hint_s=trace.period_hint_s))
+        common.drop_caches()
+        # replication=2: each function has two owner shards, so the
+        # aggregator prewarms *replicas* — the node the ramp spills onto
+        # is warm before the spillover placement lands
+        cluster = _build_cluster(store_dir, cfg, names, request,
+                                 n_nodes=n_nodes, placement="locality",
+                                 quick=quick, demand=demand,
+                                 max_instances_per_function=1,
+                                 replication=2)
+        placed = _replay_with_placements(cluster, trace, request)
+        cluster.drain(timeout=120)
+        metrics = _spillover_metrics(placed, names, ramp_at_s=dur / 2,
+                                     label=f"demand.{arm}", verbose=verbose)
+        if arm == "on":
+            agg_stats = cluster.demand_plane.stats()
+            metrics["aggregator"] = {
+                k: agg_stats[k] for k in ("steps", "pushes", "errors")}
+        cluster.close()
+        out[arm] = metrics
+    return out
+
+
+def write_artifact(ab: dict, kill: dict, demand: dict) -> None:
     with open(ARTIFACT, "w") as f:
         json.dump({"benchmark": "cluster", "placement_ab": ab,
-                   "node_kill": kill}, f, indent=2)
+                   "node_kill": kill, "demand_plane": demand}, f, indent=2)
     print(f"\nwrote {ARTIFACT}")
 
 
@@ -280,6 +423,8 @@ def main(argv=None):
     ab = run_placement_ab(args.function, quick=args.quick,
                           n_nodes=args.nodes, trace_file=args.trace_file)
     kill = run_node_kill(args.function, quick=args.quick, n_nodes=args.nodes)
+    demand = run_demand_ab(args.function, quick=args.quick,
+                           n_nodes=args.nodes)
     for tname, arms in ab.items():
         if not isinstance(arms, dict) or "locality" not in arms:
             continue
@@ -290,8 +435,14 @@ def main(argv=None):
               f"p95 serve latency (the cold-start tail) "
               f"{loc['p95_total_s']*1e3:.1f}ms "
               f"vs {rnd['p95_total_s']*1e3:.1f}ms")
+    on, off = demand["on"], demand["off"]
+    print(f"\ndemand plane: post-ramp spillover hit prewarmed replicas "
+          f"{on['spillover_prewarmed']}/{on['spillover_served']} with the "
+          f"aggregator vs {off['spillover_prewarmed']}/"
+          f"{off['spillover_served']} without; post-ramp cold "
+          f"{on['post_ramp_cold']} vs {off['post_ramp_cold']}")
     if args.quick:
-        write_artifact(ab, kill)
+        write_artifact(ab, kill, demand)
 
 
 if __name__ == "__main__":

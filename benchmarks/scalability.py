@@ -19,13 +19,18 @@ and diurnal traces against
   * ``adaptive``  — the SPES-style control plane (serving/policy.py):
     arrival-history-driven warm targets, off-path prewarming, adaptive
     keepalive;
+  * ``forecast``  — adaptive + periodicity-aware demand (serving/
+    forecast.py): the diurnal trace's phase-binned rate profile raises the
+    warm target *ahead* of each ramp (seeded by the trace's period hint),
+    instead of tracking it;
 
 and report cold-start fraction + e2e p50/p95 per arm.  ``--quick`` also
 writes a ``BENCH_scalability.json`` artifact (uploaded by CI) so the perf
 trajectory is tracked over time.
 
     PYTHONPATH=src python -m benchmarks.scalability [--quick] [--function f]
-        [--policy {both,reactive,adaptive,off}] [--trace-file azure.csv]
+        [--policy {both,reactive,adaptive,forecast,off}]
+        [--trace-file azure.csv]
 
 ``--trace-file`` replays a real Azure Functions 2019 invocations-per-minute
 CSV (time-compressed onto the registered functions) as a third A/B trace.
@@ -146,22 +151,27 @@ def _trace_metrics(results, label: str, verbose: bool,
 
 
 def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
-                  arms: tuple[str, ...] = ("reactive", "adaptive"),
+                  arms: tuple[str, ...] = ("reactive", "adaptive",
+                                           "forecast"),
                   trace_file: str | None = None,
                   verbose: bool = True) -> dict:
-    """Replay identical traces under reactive vs adaptive provisioning.
+    """Replay identical traces under reactive / adaptive / forecast arms.
 
     The reactive arm is PR 1's serving stack verbatim: instances spawn on
     arrival and a background reaper sweeps the static keepalive.  The
-    adaptive arm adds the prewarming control plane.  Both arms replay the
-    *same* trace objects, so the cold-start fraction and p95 e2e deltas are
-    attributable to provisioning alone.
+    adaptive arm adds the prewarming control plane; the forecast arm
+    additionally folds arrival history into a phase-binned periodicity
+    profile (the diurnal trace spans two cycles, so cycle 1 teaches the
+    profile and cycle 2's ramp is prewarmed *ahead* of its arrivals).  All
+    arms replay the *same* trace objects, so the cold-start fraction and
+    p95 e2e deltas are attributable to provisioning alone.
     """
     from repro.configs import SMOKES
     from repro.core.reap import WS_CACHE
-    from repro.serving import (OpenLoopGenerator, Orchestrator, PolicyConfig,
-                               PrewarmPolicy, Router, RouterConfig,
-                               azure_trace, diurnal_trace, poisson_trace)
+    from repro.serving import (ForecastConfig, OpenLoopGenerator,
+                               Orchestrator, PolicyConfig, PrewarmPolicy,
+                               Router, RouterConfig, azure_trace,
+                               diurnal_trace, poisson_trace)
 
     cfg = SMOKES[function] if quick else common.bench_functions()[function]
     store = common.ensure_store()
@@ -184,8 +194,10 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
     traces = {
         "poisson": poisson_trace(rate_rps=3.0 * n_fns, duration_s=dur,
                                  functions=names, seed=11),
+        # two full diurnal cycles: the forecast arm learns the period from
+        # cycle 1 and must anticipate cycle 2's ramp
         "diurnal": diurnal_trace(base_rps=1.0, peak_rps=4.0 * n_fns,
-                                 period_s=dur, duration_s=dur,
+                                 period_s=dur / 2, duration_s=dur,
                                  functions=names, burst_rps=6.0 * n_fns,
                                  burst_every_s=dur / 3, burst_len_s=0.05,
                                  seed=13),
@@ -216,10 +228,18 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
             policy = None
             stop_reaper = threading.Event()
             reaper = None
-            if arm == "adaptive":
-                policy = PrewarmPolicy(orch, router, PolicyConfig(
+            if arm in ("adaptive", "forecast"):
+                pcfg = PolicyConfig(
                     interval_s=0.05, window_s=4.0, headroom=2.0,
-                    max_warm=8, min_keepalive_s=0.75)).start()
+                    max_warm=8, min_keepalive_s=0.75)
+                if arm == "forecast":
+                    pcfg.forecast = True
+                    pcfg.forecast_cfg = ForecastConfig(
+                        bin_s=0.1, history_s=dur + 2.0,
+                        min_period_s=0.5, max_period_s=dur,
+                        lookahead_s=0.4,
+                        period_hint_s=trace.period_hint_s)
+                policy = PrewarmPolicy(orch, router, pcfg).start()
             else:
                 def _sweep():                  # PR 1's static-keepalive reaper
                     while not stop_reaper.wait(0.1):
@@ -263,7 +283,8 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run: smoke config, capped concurrency")
     ap.add_argument("--policy", default="both",
-                    choices=("both", "reactive", "adaptive", "off"),
+                    choices=("both", "reactive", "adaptive", "forecast",
+                             "off"),
                     help="which provisioning-policy A/B arms to replay")
     ap.add_argument("--trace-file", default=None, metavar="CSV",
                     help="Azure Functions 2019 invocations-per-minute CSV; "
@@ -275,8 +296,8 @@ def main(argv=None):
     rows = run(args.function, quick=args.quick)
     ab: dict = {}
     if args.policy != "off":
-        arms = (("reactive", "adaptive") if args.policy == "both"
-                else (args.policy,))
+        arms = (("reactive", "adaptive", "forecast")
+                if args.policy == "both" else (args.policy,))
         ab = run_policy_ab(args.function, quick=args.quick, arms=arms,
                            trace_file=args.trace_file)
     if args.quick:

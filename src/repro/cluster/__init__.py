@@ -5,7 +5,10 @@
   node.py      -- WorkerNode: Orchestrator + Router + policy + L1 cache
   scheduler.py -- ClusterRouter: fleet admission, locality placement,
                   node-failure rerouting, ring rebalance
+  demand.py    -- DemandAggregator: fleet-wide demand forecasts pushed to
+                  the owner shards ahead of spillover
 """
+from .demand import DemandAggregator, DemandConfig
 from .node import NodeDownError, WorkerNode
 from .scheduler import (ClusterInvocation, ClusterRouter, NoAliveNodeError,
                         ScheduleConfig, build_fleet)

@@ -96,6 +96,21 @@ class WorkerNode:
         self.router.close(drain=True)
         self.orch.close()
 
+    # -- fleet demand plane ----------------------------------------------
+
+    def push_forecast(self, name: str, rate_rps: float,
+                      expires_at: float) -> None:
+        """Accept a fleet-wide forecast rate share for ``name`` (pushed by
+        the cluster DemandAggregator to owner-shard nodes).  A node built
+        without a policy loop has no prewarming actuator — the hint is
+        dropped, matching its purely reactive behaviour."""
+        if self.policy is not None:
+            self.policy.push_forecast(name, rate_rps, expires_at)
+
+    def clear_forecast(self, name: str) -> None:
+        if self.policy is not None:
+            self.policy.clear_forecast(name)
+
     # -- data plane ------------------------------------------------------
 
     def submit(self, name: str, batch: dict, *, force_cold: bool = False):

@@ -37,6 +37,7 @@ import time
 
 from ..configs.base import ModelConfig
 from ..serving import AdmissionError, RouterClosedError
+from .demand import DemandAggregator, DemandConfig
 from .node import NodeDownError, WorkerNode
 from .snapstore import ShardedSnapshotStore
 
@@ -136,7 +137,11 @@ class ClusterRouter:
 
     def __init__(self, nodes: list[WorkerNode] | tuple[WorkerNode, ...] = (),
                  *, store: ShardedSnapshotStore | None = None,
-                 cfg: ScheduleConfig | None = None):
+                 cfg: ScheduleConfig | None = None,
+                 demand: DemandConfig | None = None):
+        """``demand``: when given, a fleet-wide :class:`DemandAggregator`
+        runs (demand.py) — every node's arrivals merge into per-function
+        forecasts pushed to the owner-shard nodes' prewarm policies."""
         self.cfg = cfg or ScheduleConfig()
         if self.cfg.placement not in ("locality", "random"):
             raise ValueError(f"unknown placement {self.cfg.placement!r}")
@@ -150,8 +155,12 @@ class ClusterRouter:
         self.n_rerouted = 0
         self.n_rejected = 0
         self.placements: dict[str, int] = {}
+        self.demand_plane = (DemandAggregator(self, demand)
+                             if demand is not None else None)
         for n in nodes:
             self.add_node(n, rebalance=False)
+        if self.demand_plane is not None:
+            self.demand_plane.start()
 
     # -- membership -----------------------------------------------------
 
@@ -174,6 +183,8 @@ class ClusterRouter:
             self._pending.setdefault(node.node_id, set())
             self.placements.setdefault(node.node_id, 0)
             functions = list(self._functions.items())
+        if self.demand_plane is not None:
+            self.demand_plane.attach_node(node)
         for name, (cfg, seed) in functions:
             node.register(name, cfg, seed=seed)
         if rebalance:
@@ -188,6 +199,10 @@ class ClusterRouter:
         if self.store is not None:
             self.store.set_alive(node_id, False)
         node.kill()                        # queued invocations now failed
+        if self.demand_plane is not None:
+            # ownership moved: drop stale hints so the victim's replicas
+            # start prewarming on the next aggregator step
+            self.demand_plane.retarget()
         with self._mu:
             pending = list(self._pending.pop(node_id, ()))
             self._pending[node_id] = set()
@@ -232,6 +247,8 @@ class ClusterRouter:
         """Warm each function's WS into its current owner shards' caches —
         run after ring membership changes so the shard tier serves the new
         mapping immediately.  Returns per-function owner caches warmed."""
+        if self.demand_plane is not None:
+            self.demand_plane.retarget()   # hints follow the new ring
         if self.store is None:
             return {}
         with self._mu:
@@ -253,6 +270,8 @@ class ClusterRouter:
             node.router.drain(left)
 
     def close(self) -> None:
+        if self.demand_plane is not None:
+            self.demand_plane.stop()
         for node in self.alive_nodes():
             node.close()
 
@@ -421,11 +440,14 @@ class ClusterRouter:
         out["nodes"] = {n.node_id: n.stats() for n in nodes}
         if self.store is not None:
             out["store"] = self.store.stats()
+        if self.demand_plane is not None:
+            out["demand"] = self.demand_plane.stats()
         return out
 
 
 def build_fleet(n_nodes: int, store_dir: str, *,
                 cfg: ScheduleConfig | None = None,
+                demand: DemandConfig | None = None,
                 replication: int = 1, vnodes: int = 64,
                 transfer=None, cache_capacity_bytes: int = 256 << 20,
                 **node_kw) -> ClusterRouter:
@@ -433,7 +455,8 @@ def build_fleet(n_nodes: int, store_dir: str, *,
 
     ``node_kw`` is forwarded to every :class:`WorkerNode` (concurrency,
     keepalive, per-node policy, ...).  Nodes share ``store_dir`` as the
-    origin snapshot store.
+    origin snapshot store.  ``demand`` enables the fleet demand plane
+    (arrivals from every node merged and forecast to the owner shards).
     """
     from .shardmap import ConsistentHashRing
     ring = ConsistentHashRing(vnodes=vnodes)
@@ -444,4 +467,4 @@ def build_fleet(n_nodes: int, store_dir: str, *,
     nodes = [WorkerNode(f"node-{i}", store_dir,
                         ws_cache=store.attach(f"node-{i}"), **node_kw)
              for i in range(n_nodes)]
-    return ClusterRouter(nodes, store=store, cfg=cfg)
+    return ClusterRouter(nodes, store=store, cfg=cfg, demand=demand)

@@ -1,3 +1,4 @@
+from .forecast import ForecastConfig, ForecastDemand, PeriodicityDetector
 from .instance import ExecutableCache, FunctionInstance, State
 from .loadgen import (ClosedLoopGenerator, OpenLoopGenerator, Trace,
                       TraceEvent, azure_trace, diurnal_trace, poisson_trace,

@@ -47,6 +47,12 @@ class TraceEvent:
 @dataclasses.dataclass
 class Trace:
     events: list[TraceEvent]
+    #: Known fundamental period of the arrival process (seconds), when the
+    #: generator has one (diurnal_trace's sinusoid period; azure_trace's
+    #: compressed day).  A forecasting policy may take it as a hint
+    #: (ForecastConfig.period_hint_s) instead of detecting the period
+    #: blind.  None: no periodicity is claimed.
+    period_hint_s: float | None = None
 
     @property
     def duration_s(self) -> float:
@@ -57,16 +63,19 @@ class Trace:
         return sorted({e.function for e in self.events})
 
     def save(self, path: str) -> None:
+        doc = {"version": 1,
+               "events": [dataclasses.asdict(e) for e in self.events]}
+        if self.period_hint_s is not None:
+            doc["period_hint_s"] = self.period_hint_s
         with open(path, "w") as f:
-            json.dump({"version": 1,
-                       "events": [dataclasses.asdict(e) for e in self.events]},
-                      f, indent=None)
+            json.dump(doc, f, indent=None)
 
     @classmethod
     def load(cls, path: str) -> "Trace":
         with open(path) as f:
             d = json.load(f)
-        return cls([TraceEvent(**e) for e in d["events"]])
+        return cls([TraceEvent(**e) for e in d["events"]],
+                   period_hint_s=d.get("period_hint_s"))
 
 
 def _normalize_mix(names: list[str], mix: dict[str, float] | None) -> np.ndarray:
@@ -144,7 +153,7 @@ def diurnal_trace(base_rps: float, peak_rps: float, period_s: float,
 
     rate_max = peak_rps + (burst_rps if burst_every_s > 0 else 0.0)
     if rate_max <= 0:
-        return Trace([])
+        return Trace([], period_hint_s=period_s)
     events: list[TraceEvent] = []
     t = 0.0
     while True:
@@ -158,7 +167,7 @@ def diurnal_trace(base_rps: float, peak_rps: float, period_s: float,
             function=functions[int(rng.choice(len(functions), p=probs))],
             seed=int(rng.integers(0, 2**31)),
         ))
-    return Trace(events)
+    return Trace(events, period_hint_s=period_s)
 
 
 def azure_trace(path: str, functions: list[str] | None = None, *,
@@ -172,7 +181,8 @@ def azure_trace(path: str, functions: list[str] | None = None, *,
     ``1..1440`` holding the invocation count in that minute of the day.
     Parsing is header-driven — any non-numeric leading columns are treated
     as identity, any numeric header as a minute index — so the 2021 format
-    variants parse too.
+    variants parse too.  Rows with garbled count cells are skipped, not
+    fatal; a file yielding *no* valid rows raises ``ValueError``.
 
     Synthesis: rows are ranked by total invocations and the busiest
     ``top_k`` kept (default: ``len(functions)`` when a mapping is given,
@@ -198,16 +208,26 @@ def azure_trace(path: str, functions: list[str] | None = None, *,
         # interleaved after that point are not supported and would parse
         # as counts)
         id_cols = list(range(minute_cols[0]))
+        n_skipped = 0
         for line in f:
             cells = line.rstrip("\n").split(",")
             if len(cells) <= minute_cols[0]:
                 continue                     # blank/short line
             fid = "/".join(cells[i] for i in id_cols) or f"row{len(rows)}"
-            counts = [int(float(cells[i])) if i < len(cells) and cells[i]
-                      else 0 for i in minute_cols]
+            try:
+                counts = [int(float(cells[i])) if i < len(cells) and cells[i]
+                          else 0 for i in minute_cols]
+            except ValueError:
+                # a garbled count cell poisons only its own row: real trace
+                # dumps carry the occasional truncated/corrupt line, and
+                # one of them must not abort a whole replay
+                n_skipped += 1
+                continue
             rows.append((fid, counts))
     if not rows:
-        raise ValueError(f"{path}: no function rows")
+        raise ValueError(
+            f"{path}: no function rows"
+            + (f" ({n_skipped} malformed rows skipped)" if n_skipped else ""))
     rows.sort(key=lambda r: (-sum(r[1]), r[0]))  # busiest first, stable
     k = top_k if top_k is not None else (len(functions) if functions
                                          else len(rows))
@@ -226,7 +246,9 @@ def azure_trace(path: str, functions: list[str] | None = None, *,
                 events.append(TraceEvent(t=float(t) * scale, function=name,
                                          seed=int(rng.integers(0, 2**31))))
     events.sort(key=lambda e: e.t)
-    return Trace(events)
+    # production traffic's fundamental period is the day; in the compressed
+    # timeline that is the full span (one cycle of history per replay)
+    return Trace(events, period_hint_s=span_s * scale)
 
 
 #: Maps one trace event to a request payload for its function.

@@ -24,9 +24,22 @@ invocation critical path:
     and cold ones scale to zero quickly (paper §2's keepalive/memory
     tradeoff).
 
+Two demand signals beyond the reactive model feed the same actuators:
+
+  * **Periodicity forecasts** — ``PolicyConfig(forecast=True)`` swaps the
+    demand model for :class:`~repro.serving.forecast.ForecastDemand`,
+    which folds arrival history into a phase-binned rate profile and
+    raises targets *ahead* of a learned ramp (forecast.py).
+  * **Fleet hints** — a cluster-level aggregator (cluster/demand.py) may
+    :meth:`PrewarmPolicy.push_forecast` a TTL'd rate share for functions
+    whose traffic lands on *other* nodes; the step actuates
+    ``max(local target, fleet target)``, so owner-shard replicas are warm
+    before spillover placements arrive.
+
 The loop runs on a daemon thread (:meth:`PrewarmPolicy.start`) but every
 decision is a pure function of ingested timestamps, so tests drive
-:meth:`ingest` + :meth:`step` directly with synthetic clocks.
+:meth:`ingest` + :meth:`step` directly — with ``clock=`` injecting a fake
+monotonic clock (tests/fakeclock.py) they run in milliseconds.
 """
 from __future__ import annotations
 
@@ -54,13 +67,20 @@ class PolicyConfig:
     max_keepalive_s: float = 60.0
     max_prewarms_per_step: int = 2   # actuation rate limit per function/step
     sweep: bool = True               # run the keepalive reaper each step
+    forecast: bool = False           # periodicity-aware demand (forecast.py)
+    forecast_cfg: object | None = None  # ForecastConfig when forecast=True
 
 
 class FunctionDemand:
-    """Arrival model for one function: windowed rate + inter-arrival EWMA."""
+    """Arrival model for one function: windowed rate + inter-arrival EWMA.
 
-    def __init__(self, cfg: PolicyConfig):
+    ``clock`` supplies "now" whenever a caller omits it (tests inject a
+    fake monotonic clock so timing assertions never sleep).
+    """
+
+    def __init__(self, cfg: PolicyConfig, *, clock=time.monotonic):
         self.cfg = cfg
+        self.clock = clock
         self.window: deque[float] = deque()
         self.last_arrival: float | None = None
         self.ewma_interarrival: float | None = None
@@ -83,21 +103,24 @@ class FunctionDemand:
         while self.window and self.window[0] < horizon:
             self.window.popleft()
 
-    def rate(self, now: float) -> float:
+    def rate(self, now: float | None = None) -> float:
         """Predicted arrival rate (rps): max of the windowed empirical rate
         and the EWMA rate — the window reacts to bursts, the EWMA keeps a
         just-ended burst from zeroing the forecast instantly."""
+        now = self.clock() if now is None else now
         self._trim(now)
         windowed = len(self.window) / self.cfg.window_s
         ewma = (1.0 / self.ewma_interarrival
                 if self.ewma_interarrival else 0.0)
         return max(windowed, ewma if self.active(now) else 0.0)
 
-    def peak_concurrency(self, service_s: float, now: float) -> int:
+    def peak_concurrency(self, service_s: float,
+                         now: float | None = None) -> int:
         """Max arrivals landing within one service time anywhere in the
         window — the instantaneous concurrency a burst demands.  Little's
         law alone misses this: an 8-wide simultaneous burst needs 8 warm
         instances no matter how low the average rate is."""
+        now = self.clock() if now is None else now
         self._trim(now)
         ts = list(self.window)
         peak = 0
@@ -108,13 +131,22 @@ class FunctionDemand:
             peak = max(peak, hi - lo + 1)
         return peak
 
-    def active(self, now: float) -> bool:
+    def active(self, now: float | None = None) -> bool:
         """Demand is live while the gap since the last arrival is within the
         adaptive keepalive horizon."""
+        now = self.clock() if now is None else now
         return (self.last_arrival is not None
                 and now - self.last_arrival <= self.keepalive(now))
 
-    def gap_estimate(self, now: float) -> float | None:
+    def forgettable(self, now: float | None = None) -> bool:
+        """May the policy drop this demand entry once its target hits zero?
+        The reactive model holds no state worth keeping past its keepalive;
+        the forecasting subclass overrides this to preserve a learned
+        period through traffic troughs."""
+        now = self.clock() if now is None else now
+        return not self.active(now)
+
+    def gap_estimate(self, now: float | None = None) -> float | None:
         """Expected inter-arrival gap, robust to bursts: the raw EWMA is
         dominated by tiny intra-burst gaps (a burst of 8 back-to-back
         arrivals drives it to ~0), which would collapse the keepalive right
@@ -125,6 +157,7 @@ class FunctionDemand:
         arrival whose window has expired): such functions must scale down
         *fast*, not be pinned at the maximum keepalive.
         """
+        now = self.clock() if now is None else now
         self._trim(now)
         cands = []
         if self.ewma_interarrival is not None:
@@ -133,7 +166,8 @@ class FunctionDemand:
             cands.append(self.cfg.window_s / len(self.window))
         return max(cands) if cands else None
 
-    def keepalive(self, now: float) -> float:
+    def keepalive(self, now: float | None = None) -> float:
+        now = self.clock() if now is None else now
         gap = self.gap_estimate(now)
         if gap is None:
             return self.cfg.min_keepalive_s
@@ -153,12 +187,17 @@ class PrewarmPolicy:
     """
 
     def __init__(self, orch: Orchestrator, router: Router | None = None,
-                 cfg: PolicyConfig | None = None):
+                 cfg: PolicyConfig | None = None, *, clock=time.monotonic):
         self.orch = orch
         self.router = router
         self.cfg = cfg or PolicyConfig()
+        self.clock = clock
         self.demand: dict[str, FunctionDemand] = {}
         self.targets: dict[str, int] = {}
+        # fleet-pushed forecast rates: name -> (rate_rps, expires_at).  The
+        # cluster demand plane (cluster/demand.py) pushes these to the
+        # owner-shard nodes so replicas prewarm before spillover lands.
+        self.fleet: dict[str, tuple[float, float]] = {}
         self.n_steps = 0
         self.n_prewarms = 0
         self.n_errors = 0
@@ -171,14 +210,50 @@ class PrewarmPolicy:
 
     # -- demand ingestion ----------------------------------------------
 
+    def _new_demand(self) -> FunctionDemand:
+        if self.cfg.forecast:
+            from .forecast import ForecastDemand
+            return ForecastDemand(self.cfg, self.cfg.forecast_cfg,
+                                  clock=self.clock)
+        return FunctionDemand(self.cfg, clock=self.clock)
+
     def ingest(self, arrivals: dict[str, list[float]]) -> None:
         """Feed per-function arrival timestamps (``time.monotonic``)."""
         with self._mu:
             for name, ts in arrivals.items():
                 d = self.demand.get(name)
                 if d is None:
-                    d = self.demand[name] = FunctionDemand(self.cfg)
+                    d = self.demand[name] = self._new_demand()
                 d.observe(ts)
+
+    def push_forecast(self, name: str, rate_rps: float,
+                      expires_at: float) -> None:
+        """Accept a fleet-wide demand forecast for ``name`` (rate share
+        this node should be warm for).  Hints expire at ``expires_at`` so
+        a dead aggregator can never pin warm pools forever."""
+        with self._mu:
+            self.fleet[name] = (rate_rps, expires_at)
+
+    def clear_forecast(self, name: str) -> None:
+        with self._mu:
+            self.fleet.pop(name, None)
+
+    def _fleet_target(self, name: str, rec: FunctionRecord,
+                      now: float) -> int:
+        """Warm instances the fleet forecast asks this node to hold.
+
+        The pushed rate already carries the aggregator's safety factor
+        (DemandConfig.headroom) — applying ``self.cfg.headroom`` on top
+        would square the margin, so Little's law runs on the rate as-is.
+        """
+        hint = self.fleet.get(name)
+        if hint is None:
+            return 0
+        rate, expires = hint
+        if now >= expires or rate <= 0:
+            return 0
+        demand = rate * self._service_estimate(rec)
+        return min(self.cfg.max_warm, max(1, math.ceil(demand)))
 
     def _service_estimate(self, rec: FunctionRecord) -> float:
         with rec.lock:
@@ -199,7 +274,7 @@ class PrewarmPolicy:
             return self.cfg.default_service_s
         return sum(samples) / len(samples)
 
-    def target_for(self, name: str, now: float) -> int:
+    def target_for(self, name: str, now: float | None = None) -> int:
         """Warm-pool target: Little's-law concurrency demand with headroom,
         floored by the burst width the window has actually seen.
 
@@ -207,6 +282,7 @@ class PrewarmPolicy:
         within one cold-restore duration need two warm instances — the
         second can't wait for a reactive spawn without paying cold.
         """
+        now = self.clock() if now is None else now
         d = self.demand.get(name)
         rec = self.orch.functions.get(name)
         if d is None or rec is None or not d.active(now):
@@ -226,18 +302,30 @@ class PrewarmPolicy:
     def _step_locked(self, now: float | None) -> dict[str, int]:
         if self.router is not None:
             self.ingest(self.router.drain_arrivals())
-        now = time.monotonic() if now is None else now
+        now = self.clock() if now is None else now
         inflight: dict[str, int] = {}
         if self.router is not None:
             inflight = self.router.stats()["inflight"]
         applied: dict[str, int] = {}
         stale: list[str] = []
-        for name, d in self.demand.items():
+        for name, (_, expires) in list(self.fleet.items()):
+            if now >= expires:
+                del self.fleet[name]
+        # visit every name with live demand or a hint, plus any actuated
+        # last step — an expired/withdrawn hint must still get one pass
+        # through the target-0 branch to drop its min_warm floor
+        names = (set(self.demand) | set(self.fleet)
+                 | {n for n, t in self.targets.items() if t > 0})
+        for name in names:
+            d = self.demand.get(name)
             rec = self.orch.functions.get(name)
             if rec is None:
                 stale.append(name)
                 continue
-            target = self.target_for(name, now)
+            # the local reactive/forecast target and the fleet-pushed
+            # forecast are independent demand signals; warm for the larger
+            target = max(self.target_for(name, now),
+                         self._fleet_target(name, rec, now))
             applied[name] = target
             if target > 0:
                 # The limit is a capacity cap, the target a residency floor.
@@ -245,10 +333,15 @@ class PrewarmPolicy:
                 # shrinking it below would reclaim instances the reactive
                 # path could have parked; memory is recovered through the
                 # adaptive keepalive sweep instead.
+                # a fleet-hint-only function has no local arrival history;
+                # its residency is carried by the min_warm floor, so the
+                # keepalive just needs to be sane, not adaptive
+                keepalive = (d.keepalive(now) if d is not None
+                             else self.cfg.min_keepalive_s)
                 self.orch.set_policy(
                     name,
                     warm_limit=max(target, self.orch.warm_limit),
-                    keepalive_s=d.keepalive(now),
+                    keepalive_s=keepalive,
                     min_warm=target)
                 with rec.lock:
                     have = len(rec.idle) + rec.n_prewarming
@@ -261,14 +354,18 @@ class PrewarmPolicy:
             else:
                 # demand went stale: drop the floor and leave a *short*
                 # keepalive so residual instances scale to zero fast (the
-                # static default may be a minute), then forget the function
-                # — fresh traffic rebuilds its history on arrival
+                # static default may be a minute).  The reactive model is
+                # then forgotten — fresh traffic rebuilds its history —
+                # but a forecasting model that still holds a learned
+                # period (forgettable() False) is kept through the trough.
                 self.orch.set_policy(name, warm_limit=None,
                                      keepalive_s=self.cfg.min_keepalive_s,
                                      min_warm=0)
-                stale.append(name)
+                if d is None or d.forgettable(now):
+                    stale.append(name)
         for name in stale:
-            del self.demand[name]
+            self.demand.pop(name, None)
+            self.fleet.pop(name, None)
         self.targets = applied
         if self.cfg.sweep:
             self.orch.reap_idle()
@@ -312,6 +409,7 @@ class PrewarmPolicy:
 
     def stats(self) -> dict:
         with self._mu:
+            now = self.clock()
             return {
                 "steps": self.n_steps,
                 "prewarms_scheduled": self.n_prewarms,
@@ -319,6 +417,8 @@ class PrewarmPolicy:
                 "last_error": (repr(self.last_error)
                                if self.last_error else None),
                 "targets": dict(self.targets),
-                "keepalives": {n: d.keepalive(time.monotonic())
+                "fleet_hints": {n: rate for n, (rate, exp) in
+                                self.fleet.items() if now < exp},
+                "keepalives": {n: d.keepalive(now)
                                for n, d in self.demand.items()},
             }

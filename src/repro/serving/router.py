@@ -98,9 +98,14 @@ class Router:
         self._queues: dict[str, deque[Invocation]] = {}
         self._rr: deque[str] = deque()     # round-robin function order
         self._inflight: dict[str, int] = {}
-        # per-function arrival timestamps (time.monotonic), drained by the
-        # prewarming policy loop; bounded so an idle policy can't leak memory
-        self._arrivals: dict[str, deque[float]] = {}
+        # per-function arrival timestamps (time.monotonic) fanned out to
+        # one deque per *tap*: the default tap feeds the node's prewarming
+        # policy loop; the cluster demand plane opens its own tap so both
+        # consumers see every arrival (a single queue would let whichever
+        # drains first starve the other).  Bounded so an idle consumer
+        # can't leak memory.
+        self._taps: dict[str, dict[str, deque[float]]] = {
+            self.DEFAULT_TAP: {}}
         self.max_arrival_history = 4096
         self._closed = False
         self._started = False
@@ -127,13 +132,15 @@ class Router:
                 q = self._queues[name] = deque()
                 self._rr.append(name)
                 self._inflight.setdefault(name, 0)
-            # demand signal for the policy loop: every arrival counts,
+            # demand signal for the policy loop(s): every arrival counts,
             # including ones the admission controller is about to throttle
-            arr = self._arrivals.get(name)
-            if arr is None:
-                arr = self._arrivals[name] = deque(
-                    maxlen=self.max_arrival_history)
-            arr.append(time.monotonic())
+            t_arr = time.monotonic()
+            for tap in self._taps.values():
+                arr = tap.get(name)
+                if arr is None:
+                    arr = tap[name] = deque(
+                        maxlen=self.max_arrival_history)
+                arr.append(t_arr)
             if len(q) >= self.cfg.queue_depth:
                 self.rejected += 1
                 raise AdmissionError(
@@ -197,12 +204,24 @@ class Router:
         for t in self._workers:
             t.join(timeout=5.0)
 
-    def drain_arrivals(self) -> dict[str, list[float]]:
-        """Pop and return per-function arrival timestamps accumulated since
-        the previous call (``time.monotonic`` values, submit order)."""
+    DEFAULT_TAP = "policy"
+
+    def open_tap(self, tap: str) -> str:
+        """Create an independent arrival stream named ``tap`` (idempotent).
+        Every subsequent submit is recorded into it; drain it with
+        ``drain_arrivals(tap=...)``."""
         with self._cv:
-            out = {n: list(d) for n, d in self._arrivals.items() if d}
-            for d in self._arrivals.values():
+            self._taps.setdefault(tap, {})
+        return tap
+
+    def drain_arrivals(self, tap: str = DEFAULT_TAP) -> dict[str, list[float]]:
+        """Pop and return per-function arrival timestamps accumulated in
+        ``tap`` since its previous drain (``time.monotonic`` values, submit
+        order).  Draining one tap never disturbs another's backlog."""
+        with self._cv:
+            arrivals = self._taps.get(tap, {})
+            out = {n: list(d) for n, d in arrivals.items() if d}
+            for d in arrivals.values():
                 d.clear()
         return out
 

@@ -1,0 +1,48 @@
+"""Deterministic monotonic clock for policy/forecast timing tests.
+
+Timing behaviour in the control plane (PrewarmPolicy, FunctionDemand,
+ForecastDemand, PeriodicityDetector, DemandAggregator) is a pure function
+of ingested timestamps and "now" — every class takes a ``clock=`` hook.
+Injecting a :class:`FakeClock` turns sleep-based timing tests into
+arithmetic: ``clock.advance(3600)`` is an hour of keepalive expiry in zero
+wall time, with zero flake.
+
+The clock is callable (drop-in for ``time.monotonic``) and its ``sleep``
+is a no-op that *advances* fake time instead of pausing the test.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class FakeClock:
+    """Monotonic fake clock: call it for "now", advance it explicitly.
+
+    Starts at an arbitrary non-zero epoch (like ``time.monotonic``, the
+    absolute value is meaningless — only differences matter).  Thread-safe
+    so a policy loop thread may read it while the test advances it.
+    """
+
+    def __init__(self, start: float = 1000.0):
+        self._t = float(start)
+        self._mu = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._mu:
+            return self._t
+
+    @property
+    def now(self) -> float:
+        return self()
+
+    def advance(self, dt: float) -> float:
+        """Move time forward by ``dt`` seconds; returns the new "now"."""
+        if dt < 0:
+            raise ValueError("monotonic clocks do not rewind")
+        with self._mu:
+            self._t += dt
+            return self._t
+
+    def sleep(self, dt: float) -> None:
+        """No-op sleep: advances fake time, costs no wall time."""
+        self.advance(dt)

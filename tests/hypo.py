@@ -26,11 +26,15 @@ except ModuleNotFoundError:
         return deco
 
     class _AnyStrategy:
-        """Stands in for ``hypothesis.strategies``: any call returns None."""
+        """Stands in for ``hypothesis.strategies`` *and* for any strategy
+        object: attribute access yields a callable returning another
+        stand-in, so module-level strategy expressions — including chained
+        combinators like ``st.lists(...).filter(...)`` — construct fine
+        even though the decorated tests are skipped."""
 
         def __getattr__(self, _name):
             def _any(*_a, **_k):
-                return None
+                return _AnyStrategy()
             return _any
 
     st = _AnyStrategy()

@@ -1,0 +1,292 @@
+"""Fleet demand plane: arrival merge, owner-shard forecast routing,
+re-targeting on membership change, and end-to-end prewarm-before-spillover.
+
+The aggregator unit tests run on stubs + the fake clock (no models, no
+sleeps).  The integration tests drive a real 3-node fleet but step every
+control loop *by hand*, so actuation is deterministic."""
+import time
+
+import pytest
+from fakeclock import FakeClock
+
+from repro.cluster import ConsistentHashRing
+from repro.cluster.demand import FLEET_TAP, DemandAggregator, DemandConfig
+from repro.serving import PolicyConfig
+
+# -- stubs ---------------------------------------------------------------
+
+
+class StubPolicy:
+    def __init__(self):
+        self.hints = {}
+
+    def push_forecast(self, name, rate, expires_at):
+        self.hints[name] = (rate, expires_at)
+
+    def clear_forecast(self, name):
+        self.hints.pop(name, None)
+
+
+class StubOrch:
+    functions: dict = {}
+
+
+class StubRouter:
+    def __init__(self):
+        self.taps = {}
+
+    def open_tap(self, tap):
+        self.taps.setdefault(tap, {})
+        return tap
+
+    def load_arrivals(self, tap, arrivals):
+        for name, ts in arrivals.items():
+            self.taps.setdefault(tap, {}).setdefault(name, []).extend(ts)
+
+    def drain_arrivals(self, tap="policy"):
+        out = self.taps.get(tap, {})
+        self.taps[tap] = {}
+        return {n: ts for n, ts in out.items() if ts}
+
+
+class StubNode:
+    def __init__(self, node_id):
+        self.node_id = node_id
+        self.alive = True
+        self.router = StubRouter()
+        self.policy = StubPolicy()
+        self.orch = StubOrch()
+
+    def push_forecast(self, name, rate, expires_at):
+        self.policy.push_forecast(name, rate, expires_at)
+
+    def clear_forecast(self, name):
+        self.policy.clear_forecast(name)
+
+
+class StubStore:
+    def __init__(self, ring, replication=1):
+        self.ring = ring
+        self.replication = replication
+
+    def owners(self, name):
+        return self.ring.lookup(name, self.replication)
+
+
+class StubCluster:
+    def __init__(self, node_ids, replication=1):
+        self.nodes = {i: StubNode(i) for i in node_ids}
+        self.store = StubStore(ConsistentHashRing(node_ids, vnodes=16),
+                               replication)
+
+    def alive_nodes(self):
+        return [n for n in self.nodes.values() if n.alive]
+
+
+def steady(now, rate, dur=3.0):
+    n = int(rate * dur)
+    return [now - dur + i * (dur / n) for i in range(n)]
+
+
+# -- aggregator unit (stubs + fake clock) --------------------------------
+
+def test_aggregator_pushes_rate_shares_to_owner_shards_only():
+    cluster = StubCluster(["na", "nb", "nc"], replication=2)
+    clock = FakeClock()
+    agg = DemandAggregator(cluster, DemandConfig(
+        headroom=1.5, hint_ttl_s=2.0), clock=clock)
+    now = clock.now
+    # arrivals live on nc's router; forecasts must go to the *owners*
+    cluster.nodes["nc"].router.open_tap(FLEET_TAP)
+    cluster.nodes["nc"].router.load_arrivals(
+        FLEET_TAP, {"f": steady(now, rate=10.0)})
+    pushed = agg.step()
+    owners = cluster.store.owners("f")
+    assert len(owners) == 2
+    assert pushed["f"] == pytest.approx(10.0 * 1.5, rel=0.2)
+    for node_id, node in cluster.nodes.items():
+        if node_id in owners:
+            rate, expires = node.policy.hints["f"]
+            assert rate == pytest.approx(pushed["f"] / 2)
+            assert expires == pytest.approx(now + 2.0)
+        else:
+            assert "f" not in node.policy.hints
+    assert agg.pushed["f"] == set(owners)
+
+
+def test_aggregator_retargets_when_owner_dies():
+    cluster = StubCluster(["na", "nb", "nc"], replication=1)
+    clock = FakeClock()
+    agg = DemandAggregator(cluster, DemandConfig(hint_ttl_s=5.0),
+                           clock=clock)
+    agg.ingest({"f": steady(clock.now, rate=10.0)})
+    agg.step()
+    [owner] = cluster.store.owners("f")
+    # the owner dies and leaves the ring (what ClusterRouter.kill_node does)
+    cluster.nodes[owner].alive = False
+    cluster.store.ring.remove(owner)
+    agg.retarget()
+    clock.advance(0.1)
+    agg.ingest({"f": steady(clock.now, rate=10.0)})
+    agg.step()
+    [successor] = cluster.store.owners("f")
+    assert successor != owner
+    assert "f" in cluster.nodes[successor].policy.hints
+    assert agg.pushed["f"] == {successor}
+
+
+def test_aggregator_withdraws_hints_when_demand_stops():
+    cluster = StubCluster(["na", "nb"], replication=1)
+    clock = FakeClock()
+    # short history so the learned model is dropped quickly once quiet
+    from repro.serving import ForecastConfig
+    agg = DemandAggregator(cluster, DemandConfig(
+        forecast=ForecastConfig(history_s=20.0)), clock=clock)
+    agg.ingest({"f": steady(clock.now, rate=10.0)})
+    agg.step()
+    [owner] = cluster.store.owners("f")
+    assert "f" in cluster.nodes[owner].policy.hints
+    clock.advance(30.0)               # past window, keepalive, and history
+    agg.step()
+    assert "f" not in cluster.nodes[owner].policy.hints
+    assert "f" not in agg.demand      # model forgotten once history is quiet
+    assert agg.pushed == {}
+
+
+def test_aggregator_ignores_sub_threshold_trickle():
+    cluster = StubCluster(["na", "nb"], replication=1)
+    clock = FakeClock()
+    agg = DemandAggregator(cluster, DemandConfig(min_push_rate=5.0),
+                           clock=clock)
+    agg.ingest({"f": steady(clock.now, rate=1.0)})
+    assert agg.step() == {}           # 1 rps < threshold: no hint pushed
+    assert all(not n.policy.hints for n in cluster.nodes.values())
+
+
+# -- real fleet integration ---------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet(tmp_path_factory):
+    import jax
+    from repro.cluster import ScheduleConfig, TransferModel, build_fleet
+    from repro.core import ReapConfig
+    from repro.configs import SMOKES
+    from repro.launch import steps
+    from repro.serving import PrewarmPolicy
+
+    store_dir = str(tmp_path_factory.mktemp("dstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(0))
+    cluster = build_fleet(
+        3, store_dir, cfg=ScheduleConfig(placement="locality"),
+        transfer=TransferModel(latency_s=1e-4, gbps=10.0),
+        max_concurrency=2, max_instances_per_function=2, mode="reap",
+        reap=ReapConfig(o_direct=False))
+    # hand-stepped policies (not started): actuation is deterministic
+    for node in cluster.nodes.values():
+        node.policy = PrewarmPolicy(node.orch, node.router,
+                                    PolicyConfig(sweep=False))
+    cluster.register("dfn", cfg, seed=0, warmup_batch=batch)
+    _, rep = cluster.invoke("dfn", batch)      # record phase
+    assert rep.processing_s > 0
+    yield cluster, batch
+    for node in cluster.nodes.values():
+        if node.policy is not None:
+            node.policy.stop()
+    cluster.close()
+
+
+def test_fleet_arrivals_reach_owner_policies_and_prewarm(fleet):
+    """The tentpole property end-to-end: traffic served anywhere in the
+    fleet makes the *owner shards* prewarm — before any spillover
+    placement lands on them."""
+    cluster, batch = fleet
+    agg = DemandAggregator(cluster, DemandConfig(hint_ttl_s=10.0,
+                                                 headroom=2.0))
+    for node in cluster.nodes.values():
+        agg.attach_node(node)
+    for _ in range(8):                # sustained traffic, wherever it lands
+        cluster.invoke("dfn", batch)
+    pushed = agg.step()
+    assert pushed["dfn"] > 0
+    owners = [o for o in cluster.store.owners("dfn")
+              if cluster.nodes[o].alive]
+    assert owners
+    for node_id in owners:
+        node = cluster.nodes[node_id]
+        assert node.policy.fleet["dfn"][0] > 0   # hint arrived
+        node.policy.step()
+        node.orch.prewarm_quiesce()
+        assert node.orch.idle_count("dfn") >= 1  # replica is warm
+        # and a placement landing there now serves without restore cost
+        _, rep = node.submit("dfn", batch).result(120)
+        assert rep.load_vmm_s == 0.0
+
+
+def test_cluster_router_runs_demand_plane_lifecycle(tmp_path_factory):
+    """build_fleet(demand=...) wires the aggregator: taps open on every
+    node, stats expose it, close() stops the loop thread."""
+    import jax
+    from repro.cluster import ScheduleConfig, TransferModel, build_fleet
+    from repro.core import ReapConfig
+    from repro.configs import SMOKES
+    from repro.launch import steps
+
+    store_dir = str(tmp_path_factory.mktemp("lstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(2))
+    cluster = build_fleet(
+        2, store_dir, cfg=ScheduleConfig(placement="locality"),
+        demand=DemandConfig(interval_s=0.02),
+        transfer=TransferModel(latency_s=1e-4, gbps=10.0),
+        max_concurrency=2, mode="reap", reap=ReapConfig(o_direct=False),
+        policy=PolicyConfig(interval_s=0.02, sweep=False))
+    try:
+        assert cluster.demand_plane is not None
+        for node in cluster.nodes.values():
+            assert FLEET_TAP in node.router._taps
+        cluster.register("lfn", cfg, seed=0, warmup_batch=batch)
+        _, rep = cluster.invoke("lfn", batch)
+        assert rep.processing_s > 0
+        deadline = time.monotonic() + 5.0
+        while (cluster.demand_plane.n_steps == 0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        stats = cluster.stats()
+        assert stats["demand"]["steps"] > 0
+        assert stats["demand"]["errors"] == 0
+    finally:
+        cluster.close()
+    assert cluster.demand_plane._thread is None  # loop joined on close
+
+
+def test_aggregator_loop_survives_errors():
+    """A node dying mid-step must not kill the fleet control loop."""
+    cluster = StubCluster(["na"])
+    agg = DemandAggregator(cluster, DemandConfig(interval_s=0.005))
+    boom = {"n": 0}
+
+    def bad_drain():
+        boom["n"] += 1
+        if boom["n"] == 1:
+            raise RuntimeError("node died mid-drain")
+
+    agg._drain_nodes = bad_drain
+    agg.start()
+    deadline = time.monotonic() + 5.0
+    while boom["n"] < 3 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    agg.stop()
+    assert boom["n"] >= 3
+    assert agg.n_errors >= 1
+
+
+def test_double_start_and_stop_are_idempotent():
+    cluster = StubCluster(["na"])
+    agg = DemandAggregator(cluster, DemandConfig(interval_s=0.01))
+    agg.start()
+    t = agg._thread
+    assert agg.start()._thread is t
+    agg.stop()
+    agg.stop()
+    assert agg._thread is None

@@ -1,0 +1,137 @@
+"""Periodicity detection + forecast-blended demand (serving/forecast.py).
+
+All pure-model: synthetic arrival streams on the deterministic fake clock,
+no orchestrator, no sleeps.
+"""
+import numpy as np
+import pytest
+from fakeclock import FakeClock
+
+from repro.serving import (ForecastConfig, ForecastDemand,
+                           PeriodicityDetector, PolicyConfig)
+
+CFG = ForecastConfig(bin_s=0.5, history_s=80.0, min_period_s=2.0,
+                     max_period_s=30.0, min_cycles=2.0, lookahead_s=2.0)
+
+
+def periodic_stream(t0: float, period: float, cycles: int, *,
+                    busy_at: float = 2.0, busy_len: float = 1.5,
+                    n_busy: int = 12, seed: int = 0) -> list[float]:
+    """Arrivals bunched into one busy phase per cycle (a daily ramp)."""
+    rng = np.random.default_rng(seed)
+    ts: list[float] = []
+    for c in range(cycles):
+        base = t0 + c * period + busy_at
+        ts += list(base + rng.uniform(0, busy_len, size=n_busy))
+    return sorted(ts)
+
+
+# -- period detection ---------------------------------------------------
+
+def test_detects_period_of_synthetic_periodic_stream():
+    clock = FakeClock(160.0)
+    det = PeriodicityDetector(CFG, clock=clock)
+    det.observe(periodic_stream(100.0, period=10.0, cycles=6))
+    found = det.detect()
+    assert found is not None
+    period, conf = found
+    assert period == pytest.approx(10.0, abs=CFG.bin_s)
+    assert conf >= CFG.min_confidence
+    # the profile's peak phase carries the busy window's rate
+    prof = det.profile()
+    assert prof.max() >= 4.0                  # 12 arrivals / 1.5 s spread
+    # deterministic: same history, same answer
+    assert det.detect() == found
+
+
+def test_phase_shifted_stream_same_period_shifted_profile():
+    """Detection is phase-blind; the profile carries the phase."""
+    clock = FakeClock(160.0)
+    a = PeriodicityDetector(CFG, clock=clock)
+    b = PeriodicityDetector(CFG, clock=clock)
+    a.observe(periodic_stream(100.0, period=10.0, cycles=6, busy_at=2.0))
+    b.observe(periodic_stream(100.0, period=10.0, cycles=6, busy_at=6.0))
+    pa, _ = a.detect()
+    pb, _ = b.detect()
+    assert pa == pytest.approx(pb, abs=CFG.bin_s)
+    # each forecasts high exactly at its own busy phase of the next cycle
+    assert a.forecast_rate(162.5, 1.0) > 2.0      # 162.5 % 10 = busy for a
+    assert b.forecast_rate(166.5, 1.0) > 2.0      # busy for b
+    assert a.forecast_rate(166.5, 1.0) < 1.0      # a's trough
+    assert b.forecast_rate(162.5, 1.0) < 1.0      # b's trough
+
+
+def test_aperiodic_stream_detects_nothing():
+    clock = FakeClock(160.0)
+    det = PeriodicityDetector(CFG, clock=clock)
+    rng = np.random.default_rng(3)
+    det.observe(sorted(100.0 + rng.exponential(0.7, size=100).cumsum()))
+    assert det.detect() is None
+    assert det.forecast_rate(161.0, 1.0) is None
+
+
+def test_too_little_history_detects_nothing():
+    clock = FakeClock(160.0)
+    det = PeriodicityDetector(CFG, clock=clock)
+    det.observe(periodic_stream(150.0, period=10.0, cycles=1))
+    assert det.detect() is None               # < min_cycles of history
+
+
+def test_period_hint_skips_search_and_min_cycles():
+    """A trace-supplied hint is trusted after one full cycle — the blind
+    search would still be waiting for min_cycles."""
+    clock = FakeClock(160.0)
+    hinted = ForecastConfig(**{**CFG.__dict__, "period_hint_s": 10.0})
+    det = PeriodicityDetector(hinted, clock=clock)
+    det.observe(periodic_stream(145.0, period=10.0, cycles=1,
+                                busy_at=2.0))  # busy 147-148.5 only
+    assert det.detect() is None               # < one full cycle of span
+    det.observe(periodic_stream(155.0, period=10.0, cycles=1, busy_at=2.0))
+    period, conf = det.detect()
+    assert period == 10.0 and conf == 1.0
+    assert det.forecast_rate(167.3, 1.0) > 2.0    # next cycle's busy phase
+
+
+# -- forecast-blended demand -------------------------------------------
+
+def test_forecast_demand_prewarms_ahead_of_the_ramp():
+    """The acceptance property: *before* the next cycle's busy phase the
+    blended rate (and liveness) rise, while the purely reactive model
+    still reads zero — this is what turns the daily ramp warm."""
+    clock = FakeClock(161.0)
+    pcfg = PolicyConfig(window_s=5.0)
+    d = ForecastDemand(pcfg, CFG, clock=clock)
+    d.observe(periodic_stream(100.0, period=10.0, cycles=6))
+    # now=161: last busy window ended at ~153.5; next starts at 162.
+    now = clock.now
+    from repro.serving import FunctionDemand
+    reactive = FunctionDemand(pcfg, clock=clock)
+    reactive.observe(periodic_stream(100.0, period=10.0, cycles=6))
+    assert reactive.rate(now) == 0.0          # window empty, EWMA stale
+    assert not reactive.active(now)
+    assert d.rate(now) > 2.0                  # profile sees the ramp coming
+    assert d.active(now)                      # => targets rise *now*
+    # deep in the trough (ramp > lookahead away) it scales down like the
+    # reactive model ...
+    assert d.rate(166.0) < 1.0
+    assert not d.active(166.0)
+    # ... but the learned period is not forgotten until history goes quiet
+    assert not d.forgettable(166.0)
+    assert d.forgettable(166.0 + CFG.history_s + 60.0)
+
+
+def test_forecast_demand_falls_back_to_reactive_on_aperiodic_traffic():
+    clock = FakeClock(130.0)
+    pcfg = PolicyConfig(window_s=5.0)
+    d = ForecastDemand(pcfg, CFG, clock=clock)
+    rng = np.random.default_rng(9)
+    ts = sorted(100.0 + rng.exponential(0.25, size=120).cumsum())
+    d.observe(ts)
+    now = max(ts)
+    from repro.serving import FunctionDemand
+    reactive = FunctionDemand(pcfg, clock=clock)
+    reactive.observe(ts)
+    # no period detected => identical to the reactive model
+    assert d.detector.detect(now) is None
+    assert d.rate(now) == pytest.approx(reactive.rate(now))
+    assert d.active(now) == reactive.active(now)

@@ -1,10 +1,18 @@
 """Adaptive prewarming control plane: demand model, prewarm API,
-per-function warm limits, reaper floor, and the policy loop."""
+per-function warm limits, reaper floor, and the policy loop.
+
+Timing-sensitive tests run on the deterministic fake clock
+(tests/fakeclock.py) injected via the ``clock=`` hooks — no real
+``time.sleep`` on those paths, so they finish in milliseconds and never
+flake.  Only the background-thread integration tests (marked ``slow``)
+pace themselves against the wall clock.
+"""
 import threading
 import time
 
 import jax
 import pytest
+from fakeclock import FakeClock
 
 from repro.configs import SMOKES
 from repro.core import ReapConfig
@@ -104,19 +112,19 @@ def test_prewarm_respects_per_function_warm_limit(served):
 
 
 def test_reaper_never_reclaims_below_policy_floor(served):
+    """keepalive=-1 makes every instance strictly past its deadline the
+    moment it parks — the reap outcome is deterministic with no sleep."""
     orch, batch = served
     _reset(orch)
-    orch.set_policy("fn", warm_limit=3, keepalive_s=0.0, min_warm=2)
+    orch.set_policy("fn", warm_limit=3, keepalive_s=-1.0, min_warm=2)
     orch.prewarm("fn", 3, wait=True)
     rec = orch.functions["fn"]
     with rec.lock:
         assert len(rec.idle) == 3
-    time.sleep(0.01)                  # every instance is past keepalive=0
     orch.reap_idle()
     with rec.lock:
         assert len(rec.idle) == 2     # the min_warm floor held
-    orch.set_policy("fn", warm_limit=3, keepalive_s=0.0, min_warm=0)
-    time.sleep(0.01)
+    orch.set_policy("fn", warm_limit=3, keepalive_s=-1.0, min_warm=0)
     orch.reap_idle()
     with rec.lock:
         assert len(rec.idle) == 0     # floor lifted => scale to zero
@@ -129,12 +137,13 @@ def test_policy_step_prewarms_and_sets_knobs(served):
     orch, batch = served
     _reset(orch)
     rec = orch.functions["fn"]
+    clock = FakeClock(start=1000.0)
     policy = PrewarmPolicy(orch, router=None, cfg=PolicyConfig(
-        window_s=5.0, headroom=2.0, max_warm=4, sweep=False))
-    now = time.monotonic()
+        window_s=5.0, headroom=2.0, max_warm=4, sweep=False), clock=clock)
+    now = clock.now
     # a steady 20 rps history, including pairs inside a restore horizon
     policy.ingest({"fn": [now - 1.0 + 0.05 * i for i in range(20)]})
-    applied = policy.step(now)
+    applied = policy.step()           # "now" comes from the injected clock
     assert applied["fn"] >= 1
     orch.prewarm_quiesce()
     with rec.lock:
@@ -151,25 +160,75 @@ def test_policy_step_prewarms_and_sets_knobs(served):
 def test_policy_target_zero_when_demand_stops(served):
     orch, batch = served
     _reset(orch)
-    policy = PrewarmPolicy(orch, router=None, cfg=PolicyConfig(sweep=False))
-    now = time.monotonic()
+    clock = FakeClock()
+    policy = PrewarmPolicy(orch, router=None, cfg=PolicyConfig(sweep=False),
+                           clock=clock)
+    now = clock.now
     policy.ingest({"fn": [now - 0.2, now - 0.1, now]})
-    assert policy.step(now)["fn"] >= 1
+    assert policy.step()["fn"] >= 1
     orch.prewarm_quiesce()
     # long after the last arrival the forecast goes to zero and the floor
     # drops, so a sweep can reclaim everything
-    applied = policy.step(now + 10_000.0)
+    clock.advance(10_000.0)
+    applied = policy.step()
     assert applied["fn"] == 0
     rec = orch.functions["fn"]
     assert rec.min_warm == 0
-    orch.set_policy("fn", keepalive_s=0.0, min_warm=0)
-    time.sleep(0.01)
+    assert "fn" not in policy.demand  # reactive history forgotten when stale
+    orch.set_policy("fn", keepalive_s=-1.0, min_warm=0)
     orch.reap_idle()
     with rec.lock:
         assert len(rec.idle) == 0
     _reset(orch)
 
 
+def test_policy_fleet_hint_prewarms_without_local_arrivals(served):
+    """The cluster demand plane's push path: a fleet-forecast hint alone
+    (no local history at all) raises the warm target, and the hint's
+    expiry returns the function to scale-to-zero."""
+    orch, batch = served
+    _reset(orch)
+    clock = FakeClock()
+    policy = PrewarmPolicy(orch, router=None, cfg=PolicyConfig(
+        headroom=2.0, max_warm=4, sweep=False), clock=clock)
+    # 40 rps share x service estimate (~recorded) => >= 1 warm (the rate
+    # arrives pre-headroomed by the aggregator; no local multiply)
+    policy.push_forecast("fn", 40.0, expires_at=clock.now + 5.0)
+    applied = policy.step()
+    assert applied["fn"] >= 1
+    orch.prewarm_quiesce()
+    rec = orch.functions["fn"]
+    with rec.lock:
+        assert len(rec.idle) >= 1     # prewarmed purely off the fleet hint
+        assert rec.min_warm == applied["fn"]
+    _, rep = orch.invoke("fn", batch)
+    assert rep.prewarmed and rep.load_vmm_s == 0.0
+    # past the hint's TTL the floor drops and the hint is pruned
+    clock.advance(10.0)
+    applied = policy.step()
+    assert applied.get("fn", 0) == 0
+    assert policy.fleet == {}
+    assert rec.min_warm == 0
+    _reset(orch)
+
+
+def test_policy_fleet_hint_withdrawn_on_clear(served):
+    orch, batch = served
+    _reset(orch)
+    clock = FakeClock()
+    policy = PrewarmPolicy(orch, router=None,
+                           cfg=PolicyConfig(sweep=False), clock=clock)
+    policy.push_forecast("fn", 40.0, expires_at=clock.now + 60.0)
+    assert policy.step()["fn"] >= 1
+    policy.clear_forecast("fn")       # aggregator re-targeted the hint away
+    applied = policy.step()
+    assert applied.get("fn", 0) == 0
+    assert orch.functions["fn"].min_warm == 0
+    orch.prewarm_quiesce()
+    _reset(orch)
+
+
+@pytest.mark.slow
 def test_policy_loop_with_router_end_to_end(served):
     """Background loop + router: arrivals feed the policy, later arrivals
     are served by prewarmed instances."""
@@ -195,6 +254,7 @@ def test_policy_loop_with_router_end_to_end(served):
     _reset(orch)
 
 
+@pytest.mark.slow
 def test_policy_loop_survives_errors(served):
     """A mid-step exception (e.g. racing deregistration) must not kill the
     control loop thread."""
@@ -243,6 +303,7 @@ def test_prewarm_unknown_function_raises(served):
         orch.prewarm("nope", 1)
 
 
+@pytest.mark.slow
 def test_concurrent_prewarm_and_invocations(served):
     """Prewarming races the data plane: limits hold and nothing deadlocks."""
     orch, batch = served

@@ -1,0 +1,95 @@
+"""Property tests for the consistent-hash ring (hypothesis).
+
+tests/test_cluster.py pins the ring's behaviour on fixed fleets; these
+properties let hypothesis hunt the invariants over arbitrary memberships:
+
+  * load balance within bound for any >= 2-host fleet,
+  * minimal remap on join (keys move only *to* the joiner) and on leave
+    (only the victim's keys move),
+  * ``lookup(key, n)`` returns n distinct alive hosts, primary first,
+    stable under ring-insertion order.
+
+Runs wherever hypothesis is installed (CI always); collects and skips
+gracefully elsewhere via the tests/hypo.py shim.
+"""
+from hypo import given, settings, st
+
+from repro.cluster import ConsistentHashRing
+
+KEYS = [f"fn-{i}" for i in range(400)]
+
+node_ids = st.lists(
+    st.text(alphabet="abcdefghijklmnop", min_size=1, max_size=8),
+    min_size=1, max_size=12, unique=True)
+
+
+def owners_of(ring, keys):
+    return {k: ring.owner(k) for k in keys}
+
+
+@settings(max_examples=30, deadline=None)
+@given(nodes=node_ids)
+def test_every_key_has_an_owner_and_order_does_not_matter(nodes):
+    ring = ConsistentHashRing(nodes, vnodes=32)
+    ring2 = ConsistentHashRing(list(reversed(nodes)), vnodes=32)
+    for k in KEYS[:50]:
+        owner = ring.owner(k)
+        assert owner in nodes
+        assert ring2.owner(k) == owner       # insertion order irrelevant
+
+
+@settings(max_examples=20, deadline=None)
+@given(nodes=node_ids.filter(lambda ns: len(ns) >= 4))
+def test_load_balance_within_bound(nodes):
+    """No host owns more than ~4x its fair share at 64 vnodes (the fixed
+    8-host test asserts 3x; arbitrary small fleets get a looser bound —
+    what matters is that no host is starved and none hot-spots)."""
+    ring = ConsistentHashRing(nodes, vnodes=64)
+    counts = dict.fromkeys(nodes, 0)
+    for k in KEYS:
+        counts[ring.owner(k)] += 1
+    fair = len(KEYS) / len(nodes)
+    assert all(c <= 4 * fair for c in counts.values())
+    assert sum(1 for c in counts.values() if c > 0) >= len(nodes) * 0.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(nodes=node_ids, joiner=st.text(alphabet="qrstuv", min_size=1,
+                                      max_size=8))
+def test_join_minimal_remap(nodes, joiner):
+    ring = ConsistentHashRing(nodes, vnodes=32)
+    before = owners_of(ring, KEYS)
+    ring.add(joiner)
+    after = owners_of(ring, KEYS)
+    for k in KEYS:
+        if before[k] != after[k]:
+            assert after[k] == joiner        # moves go *to* the joiner only
+
+
+@settings(max_examples=25, deadline=None)
+@given(nodes=node_ids.filter(lambda ns: len(ns) >= 2), data=st.data())
+def test_leave_moves_only_the_victims_keys(nodes, data):
+    victim = data.draw(st.sampled_from(nodes))
+    ring = ConsistentHashRing(nodes, vnodes=32)
+    before = owners_of(ring, KEYS)
+    ring.remove(victim)
+    after = owners_of(ring, KEYS)
+    for k in KEYS:
+        if before[k] == victim:
+            assert after[k] != victim
+        else:
+            assert after[k] == before[k]
+
+
+@settings(max_examples=25, deadline=None)
+@given(nodes=node_ids, n=st.integers(min_value=1, max_value=6))
+def test_lookup_returns_n_distinct_alive_hosts(nodes, n):
+    ring = ConsistentHashRing(nodes, vnodes=16)
+    for k in KEYS[:25]:
+        got = ring.lookup(k, n)
+        assert len(got) == min(n, len(nodes))
+        assert len(set(got)) == len(got)     # distinct
+        assert set(got) <= set(nodes)        # alive members only
+        assert got[0] == ring.owner(k)       # primary first
+        # replica list is a prefix-stable preference order
+        assert ring.lookup(k, max(n - 1, 1)) == got[:max(n - 1, 1)]

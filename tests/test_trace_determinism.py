@@ -1,0 +1,89 @@
+"""Trace generators must be replayable artifacts: byte-identical across
+runs from the same seed, robust to dirty input, and carrying their
+period metadata through save/load."""
+import os
+
+import pytest
+
+from repro.serving import Trace, azure_trace, diurnal_trace, poisson_trace
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "azure_sample.csv")
+NAMES = ["fn_a", "fn_b", "fn_c"]
+
+
+def _saved_bytes(trace, tmp_path, tag) -> bytes:
+    p = tmp_path / f"{tag}.json"
+    trace.save(str(p))
+    return p.read_bytes()
+
+
+# -- byte-identical replays ---------------------------------------------
+
+def test_diurnal_trace_is_byte_identical_across_runs(tmp_path):
+    kw = dict(base_rps=1.0, peak_rps=12.0, period_s=2.0, duration_s=6.0,
+              functions=NAMES, burst_rps=8.0, burst_every_s=2.0, seed=5)
+    t1, t2 = diurnal_trace(**kw), diurnal_trace(**kw)
+    assert t1.events == t2.events
+    assert _saved_bytes(t1, tmp_path, "a") == _saved_bytes(t2, tmp_path, "b")
+    # a different seed really does change the sample path
+    t3 = diurnal_trace(**{**kw, "seed": 6})
+    assert t3.events != t1.events
+
+
+def test_azure_trace_is_byte_identical_across_runs(tmp_path):
+    kw = dict(functions=NAMES, duration_s=6.0, seed=7)
+    t1 = azure_trace(FIXTURE, **kw)
+    t2 = azure_trace(FIXTURE, **kw)
+    assert t1.events == t2.events
+    assert _saved_bytes(t1, tmp_path, "a") == _saved_bytes(t2, tmp_path, "b")
+
+
+# -- period hints --------------------------------------------------------
+
+def test_generators_expose_period_hints(tmp_path):
+    d = diurnal_trace(base_rps=1.0, peak_rps=8.0, period_s=2.5,
+                      duration_s=5.0, functions=NAMES, seed=1)
+    assert d.period_hint_s == 2.5
+    a = azure_trace(FIXTURE, functions=NAMES, duration_s=6.0, seed=1)
+    assert a.period_hint_s == pytest.approx(6.0)   # the compressed day
+    p = poisson_trace(rate_rps=5.0, duration_s=2.0, functions=NAMES, seed=1)
+    assert p.period_hint_s is None                 # memoryless: no claim
+    # the hint survives the JSON round-trip (and its absence does too)
+    path = str(tmp_path / "d.json")
+    d.save(path)
+    assert Trace.load(path).period_hint_s == 2.5
+    p.save(path)
+    assert Trace.load(path).period_hint_s is None
+
+
+# -- malformed input -----------------------------------------------------
+
+def test_azure_trace_skips_malformed_rows(tmp_path):
+    """Garbled rows are dropped, not fatal: real trace dumps carry the
+    occasional truncated or corrupt line."""
+    p = tmp_path / "dirty.csv"
+    p.write_text(
+        "HashOwner,HashApp,HashFunction,Trigger,1,2,3\n"
+        "o1,a1,good,http,4,5,6\n"
+        "o2,a2,garbled,http,4,notanumber,6\n"      # corrupt count cell
+        "o3,a3,short,http\n"                       # truncated line
+        "o4,a4,good2,queue,1,0,2\n")
+    tr = azure_trace(str(p))
+    fns = {e.function for e in tr.events}
+    assert fns == {"o1/a1/good/http", "o4/a4/good2/queue"}
+    assert len(tr.events) == 15 + 3
+
+
+def test_azure_trace_all_rows_malformed_raises(tmp_path):
+    p = tmp_path / "hopeless.csv"
+    p.write_text("HashOwner,1,2\n"
+                 "o1,x,y\n"
+                 "o2,nan_ish,zz\n")
+    with pytest.raises(ValueError, match="malformed"):
+        azure_trace(str(p))
+
+
+def test_azure_trace_empty_counts_row_yields_no_events(tmp_path):
+    p = tmp_path / "quiet.csv"
+    p.write_text("HashOwner,1,2\no1,0,0\n")
+    assert azure_trace(str(p)).events == []
