@@ -24,9 +24,16 @@ and diurnal traces against
     warm target *ahead* of each ramp (seeded by the trace's period hint),
     instead of tracking it;
 
-and report cold-start fraction + e2e p50/p95 per arm.  ``--quick`` also
-writes a ``BENCH_scalability.json`` artifact (uploaded by CI) so the perf
-trajectory is tracked over time.
+and report cold-start fraction + e2e p50/p95 per arm.
+
+Plus a **burst-restore A/B**: a k-deep same-function cold burst replayed
+with group restores off (``batch_restore_limit=1``: k pipelines, k
+single-flight WS-cache waits, k per-page installs) and on (one staged
+batch: one WS fetch, one fused gather pass, k vectorized installs —
+core/restore.py), reporting WS reads/waits, install seconds and cold p95.
+
+``--quick`` also writes a ``BENCH_scalability.json`` artifact (uploaded by
+CI) so the perf trajectory is tracked over time.
 
     PYTHONPATH=src python -m benchmarks.scalability [--quick] [--function f]
         [--policy {both,reactive,adaptive,forecast,off}]
@@ -115,6 +122,80 @@ def run(function: str = "olmo-1b", *, quick: bool = False, verbose=True):
                           f"ws_reads={WS_CACHE.stats()['reads']}")
     common.write_rows("scalability", rows)
     return rows
+
+
+def run_burst_ab(function: str = "olmo-1b", *, quick: bool = False,
+                 verbose: bool = True) -> dict:
+    """Batched vs unbatched group restores on a k-deep same-function burst.
+
+    Both arms stage k cold invocations of one function on a paused router
+    and release them at once.  The ``unbatched`` arm
+    (``batch_restore_limit=1``) is the pre-group data plane: k pipelines,
+    one single-flight WS read plus k-1 follower waits, k per-page install
+    loops.  The ``batched`` arm restores the queue as one group — one WS
+    cache transaction, one fused gather pass, k vectorized installs
+    (core/restore.py).  Reported per arm: WS reads and cache transactions
+    (``ws_waits``), install-stage seconds, and cold/e2e p95.
+    """
+    from repro.configs import SMOKES
+    from repro.core.reap import WS_CACHE
+    from repro.serving import (Orchestrator, Router, RouterConfig,
+                               percentile, summarize)
+
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
+    store = common.ensure_store()
+    request = common.make_request(cfg, seed=1)
+    name = ("burstq" if quick else "burst") + f"_{function}"
+    orch = Orchestrator(store, mode="reap", warm_limit=0)
+    orch.register(name, cfg, warmup_batch=request)
+    orch.invoke(name, request)           # record phase
+    orch.scale_to_zero(name)
+
+    depths = (8,) if quick else (4, 8, 16)
+    out: dict = {}
+    for k in depths:
+        out[f"k{k}"] = {}
+        for arm, limit in (("unbatched", 1), ("batched", k)):
+            common.drop_caches()
+            WS_CACHE.clear()
+            WS_CACHE.reset_stats()
+            orch.scale_to_zero(name)
+            router = Router(orch, RouterConfig(
+                max_concurrency=k, max_instances_per_function=k,
+                batch_restore_limit=limit), start=False)
+            invs = [router.submit(name, request, force_cold=True)
+                    for _ in range(k)]
+            t0 = time.perf_counter()
+            router.start()
+            reports = [inv.result(timeout=600)[1] for inv in invs]
+            wall = time.perf_counter() - t0
+            router.close()
+            s = summarize(reports)
+            ws = WS_CACHE.stats()
+            cold_e2e = [r.e2e_s for r in reports if r.load_vmm_s > 0]
+            out[f"k{k}"][arm] = {
+                "k": k,
+                "wall_s": round(wall, 6),
+                "ws_reads": ws["reads"],
+                "ws_waits": ws["hits"] + ws["misses"],
+                "group_fetches": ws["group_fetches"],
+                "cold": s["cold"],
+                "batched": s["batched"],
+                "install_mean_s": round(s["install_mean_s"], 6),
+                "install_max_s": round(max(r.install_s for r in reports), 6),
+                "e2e_p50_s": round(s["e2e_p50_s"], 6),
+                "e2e_p95_s": round(s["e2e_p95_s"], 6),
+                "cold_e2e_p95_s": round(percentile(cold_e2e, 95), 6),
+            }
+            if verbose:
+                o = out[f"k{k}"][arm]
+                print(f"  burst k={k:2d} {arm:9s} "
+                      f"ws_reads={o['ws_reads']} ws_waits={o['ws_waits']} "
+                      f"install_mean={o['install_mean_s']*1e3:6.2f}ms "
+                      f"cold_e2e_p95={o['cold_e2e_p95_s']*1e3:7.1f}ms "
+                      f"wall={o['wall_s']*1e3:7.1f}ms")
+    orch.close()
+    return out
 
 
 def _trace_metrics(results, label: str, verbose: bool,
@@ -264,12 +345,13 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
     return out
 
 
-def write_artifact(fig9_rows, policy_ab: dict) -> None:
+def write_artifact(fig9_rows, policy_ab: dict, burst_ab: dict) -> None:
     artifact = {
         "benchmark": "scalability",
         "fig9": [{"label": label, "us_per_call": us, "derived": derived}
                  for label, us, derived in fig9_rows],
         "policy_ab": policy_ab,
+        "burst_ab": burst_ab,
     }
     with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=2)
@@ -294,6 +376,8 @@ def main(argv=None):
         ap.error(f"unknown --function {args.function!r}; "
                  f"known: {', '.join(list_archs())}")
     rows = run(args.function, quick=args.quick)
+    print("\n-- burst-restore A/B: batched vs unbatched group cold starts --")
+    burst = run_burst_ab(args.function, quick=args.quick)
     ab: dict = {}
     if args.policy != "off":
         arms = (("reactive", "adaptive", "forecast")
@@ -301,7 +385,7 @@ def main(argv=None):
         ab = run_policy_ab(args.function, quick=args.quick, arms=arms,
                            trace_file=args.trace_file)
     if args.quick:
-        write_artifact(rows, ab)
+        write_artifact(rows, ab, burst)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,9 @@
-import sys, time, shutil, os
+import sys, shutil, os
 sys.path.insert(0, "/root/repo/src")
-import numpy as np
 import jax.numpy as jnp
 from repro.configs import SMOKES
-from repro.core import (GuestMemoryFile, InstanceArena, Monitor, ReapConfig,
-                        build_instance_snapshot, run_invocation)
+from repro.core import (Monitor, ReapConfig, build_instance_snapshot,
+                        run_invocation)
 from repro.launch import steps
 import jax
 

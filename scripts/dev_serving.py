@@ -3,7 +3,6 @@ sys.path.insert(0, "/root/repo/src")
 import jax
 from repro.configs import SMOKES
 from repro.serving import Orchestrator
-from repro.core import ReapConfig
 from repro.launch import steps
 
 shutil.rmtree("/root/repo/.devstore2", ignore_errors=True)

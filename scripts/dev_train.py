@@ -1,6 +1,5 @@
 import sys, shutil, os
 sys.path.insert(0, "/root/repo/src")
-import jax
 from repro.configs import SMOKES
 from repro.training import OptConfig, SimulatedPreemption, Trainer, TrainLoopConfig
 from repro.data import synthesize_corpus

@@ -4,7 +4,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import sys
 sys.path.insert(0, "/root/repo/src")
-import json
 
 from repro.launch.dryrun import run_cell
 

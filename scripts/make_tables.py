@@ -1,5 +1,4 @@
 """Generate the §Dry-run / §Roofline markdown tables from results/dryrun."""
-import glob
 import json
 import os
 import sys

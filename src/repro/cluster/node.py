@@ -39,10 +39,14 @@ class WorkerNode:
                  max_concurrency: int = 4,
                  max_instances_per_function: int = 4,
                  queue_depth: int = 256,
+                 batch_restore_limit: int = 8,
                  keepalive_s: float = 60.0, warm_limit: int = 8,
                  policy: PolicyConfig | None = None):
         """``ws_cache``: this node's L1 (usually ``store.attach(node_id)``);
         ``policy``: when given, an adaptive prewarming loop runs per node.
+        ``batch_restore_limit`` caps the node's group restores: a queue of
+        same-function cold starts restores as one batch whose single L1
+        fetch makes any remote shard fetch happen once per group too.
         """
         self.node_id = node_id
         self.ws_cache = ws_cache
@@ -53,7 +57,8 @@ class WorkerNode:
         self.router = Router(self.orch, RouterConfig(
             max_concurrency=max_concurrency,
             max_instances_per_function=max_instances_per_function,
-            queue_depth=queue_depth))
+            queue_depth=queue_depth,
+            batch_restore_limit=batch_restore_limit))
         self.policy = (PrewarmPolicy(self.orch, self.router, policy).start()
                        if policy is not None else None)
         self._mu = threading.Lock()

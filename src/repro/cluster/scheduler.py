@@ -274,6 +274,8 @@ class ClusterRouter:
             self.demand_plane.stop()
         for node in self.alive_nodes():
             node.close()
+        if self.store is not None:
+            self.store.close()           # detach the invalidation broadcast
 
     def __enter__(self) -> "ClusterRouter":
         return self

@@ -39,7 +39,9 @@ import os
 import threading
 import time
 
-from ..core.reap import PAGE, ReapConfig, WSCache, _read_ws, has_record
+from ..core.reap import (PAGE, ReapConfig, WSCache, _read_ws, has_record,
+                         register_invalidation_listener,
+                         unregister_invalidation_listener)
 from .shardmap import ConsistentHashRing
 
 
@@ -94,6 +96,26 @@ class ShardedSnapshotStore:
         self.dead_owner_fallbacks = 0
         self.transfer_bytes = 0
         self.transfer_s = 0.0
+        self.group_fetches = 0               # shard fetches serving a batch
+        self.group_instances = 0             # instances amortized over those
+        self.pushed_invalidations = 0        # stale peer-L1 entries dropped
+        # Push invalidation (the eager path): a re-record or record drop
+        # broadcasts through core.reap's listener hook; every attached L1
+        # drops its stale entry *now* instead of on its next mtime-checked
+        # fetch.  The listener holds only a weakref so a store that is
+        # never close()d (and its caches) can still be collected; close()
+        # and GC both unregister it.
+        import weakref
+        self_ref = weakref.ref(self)
+
+        def _listener(base):
+            store = self_ref()
+            if store is not None:
+                store._push_invalidation(base)
+
+        self._listener = _listener
+        register_invalidation_listener(_listener)
+        weakref.finalize(self, unregister_invalidation_listener, _listener)
 
     # -- membership -----------------------------------------------------
 
@@ -109,8 +131,8 @@ class ShardedSnapshotStore:
                        else capacity_bytes)
                 cache = WSCache(
                     cap,
-                    source=lambda base, cfg, _n=node_id:
-                        self._shard_fetch(_n, base, cfg))
+                    source=lambda base, cfg, group=1, _n=node_id:
+                        self._shard_fetch(_n, base, cfg, group=group))
                 self.caches[node_id] = cache
             self._alive[node_id] = True
         self.ring.add(node_id)
@@ -150,12 +172,22 @@ class ShardedSnapshotStore:
 
     # -- fetch path (per-node WSCache source hook) ----------------------
 
-    def _shard_fetch(self, node_id: str, base: str, cfg: ReapConfig):
+    def _shard_fetch(self, node_id: str, base: str, cfg: ReapConfig,
+                     group: int = 1):
         """L1-miss resolution for ``node_id``: peek an alive owner's cache
         over the modeled network, else origin disk.  Runs outside any
         cache lock (the WSCache leader pattern), so the transfer sleep
         never blocks other functions' fetches; ``peek`` never blocks at
-        all, so no cross-cache wait cycle can form."""
+        all, so no cross-cache wait cycle can form.
+
+        ``group`` is the restore-batch size this fetch feeds (restore.py
+        threads it through the node's L1): a k-instance group restore
+        reaches the shard tier at most once, so the transfer cost is paid
+        once per group instead of once per instance."""
+        if group > 1:
+            with self._mu:
+                self.group_fetches += 1
+                self.group_instances += group
         name = os.path.basename(base)
         owners = self.owners(name)
         if node_id not in owners:
@@ -190,6 +222,28 @@ class ShardedSnapshotStore:
         return pages, data
 
     # -- maintenance ----------------------------------------------------
+
+    def _push_invalidation(self, base: str) -> None:
+        """Re-record/drop broadcast: eagerly drop ``base`` from every
+        attached L1 so no node can serve (or remote-peek) the stale WS
+        while waiting for its next mtime check.  Counted per entry
+        actually dropped (``pushed_invalidations``)."""
+        with self._mu:
+            caches = list(self.caches.values())
+        dropped = 0
+        for cache in caches:
+            if cache.invalidate(base):
+                dropped += 1
+        if dropped:
+            with self._mu:
+                self.pushed_invalidations += dropped
+
+    def close(self) -> None:
+        """Detach from the record-invalidation broadcast (a store used per
+        benchmark arm must not keep invalidating caches it no longer
+        owns).  GC of an unclosed store detaches it too (weakref.finalize
+        in ``__init__``)."""
+        unregister_invalidation_listener(self._listener)
 
     def resident(self, node_id: str, base: str) -> bool:
         """Scheduler locality probe: does ``node_id``'s L1 hold ``base``?"""
@@ -226,6 +280,8 @@ class ShardedSnapshotStore:
             self.origin_reads = self.dead_owner_fallbacks = 0
             self.transfer_bytes = 0
             self.transfer_s = 0.0
+            self.group_fetches = self.group_instances = 0
+            self.pushed_invalidations = 0
             caches = list(self.caches.values())
         for c in caches:
             c.reset_stats()
@@ -239,6 +295,9 @@ class ShardedSnapshotStore:
                 "dead_owner_fallbacks": self.dead_owner_fallbacks,
                 "transfer_bytes": self.transfer_bytes,
                 "transfer_s": self.transfer_s,
+                "group_fetches": self.group_fetches,
+                "group_instances": self.group_instances,
+                "pushed_invalidations": self.pushed_invalidations,
                 "alive": sorted(n for n, up in self._alive.items() if up),
             }
             caches = dict(self.caches)

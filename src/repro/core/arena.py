@@ -272,6 +272,26 @@ class InstanceArena:
                     self.resident[p] = True
             self.stats.n_pages_installed += len(page_indices)
 
+    def install_block(self, page_indices, block) -> int:
+        """Fused eager install: one vectorized scatter of a prefetched page
+        block (``block[i]`` -> page ``page_indices[i]``), instead of
+        ``install_span``'s per-page loop.  ``block`` is a ``(n, PAGE)``
+        uint8 array (the output of a fused gather pass — restore.py); pages
+        already resident are skipped, byte-identically to ``install_span``.
+        Returns the number of pages actually installed."""
+        with self._lock:
+            idx = np.asarray(page_indices, dtype=np.int64)
+            missing = ~self.resident[idx]
+            tgt = idx[missing]
+            if len(tgt):
+                arr = np.frombuffer(
+                    self.buf, dtype=np.uint8,
+                    count=self.layout.n_pages * PAGE).reshape(-1, PAGE)
+                arr[tgt] = block[missing]
+                self.resident[tgt] = True
+            self.stats.n_pages_installed += len(idx)
+            return int(len(tgt))
+
     # -- tensor access ------------------------------------------------------
 
     def tensor(self, path: str, *, fault: bool = True,

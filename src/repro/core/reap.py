@@ -47,6 +47,7 @@ class ReapConfig:
     rerecord_threshold: float = 0.5  # residual faults / |WS| triggering re-record
     min_ws_read: int = 8 << 20       # single-read floor noted in §5.2.3 (bytes)
     share_ws_cache: bool = True      # dedupe concurrent WS reads process-wide
+    fuse_engine: str = "auto"        # group-install gather: auto|numpy|pallas
 
 
 @dataclasses.dataclass
@@ -62,6 +63,8 @@ class ColdStartReport:
     ws_bytes: int = 0
     ws_cache_hit: bool = False       # WS served from the shared page cache
     prewarmed: bool = False          # served by a pre-spawned warm instance
+    install_s: float = 0.0           # portion of prefetch_s spent installing
+    batch_size: int = 1              # instances restored in this one's group
 
     @property
     def total_s(self) -> float:
@@ -73,6 +76,35 @@ class ColdStartReport:
     def e2e_s(self) -> float:
         """Client-observed latency: queueing delay + cold start + run."""
         return self.queue_s + self.total_s
+
+
+# Record-invalidation broadcast: a re-record (write_record) or record drop
+# invalidates the process-wide WS_CACHE directly, but other caches may hold
+# the stale WS too — the cluster's per-node L1s key by (base, mtime) and
+# would only notice on their next fetch.  Listeners registered here are
+# called with the base on every invalidation so a shard tier can push the
+# drop to peer caches eagerly (snapstore.py).  Listener errors are swallowed:
+# an observability hook must never fail a record write.
+_INVALIDATION_LISTENERS: list = []
+
+
+def register_invalidation_listener(fn) -> None:
+    """``fn(base)`` is called on every ``write_record``/``drop_record``."""
+    if fn not in _INVALIDATION_LISTENERS:
+        _INVALIDATION_LISTENERS.append(fn)
+
+
+def unregister_invalidation_listener(fn) -> None:
+    if fn in _INVALIDATION_LISTENERS:
+        _INVALIDATION_LISTENERS.remove(fn)
+
+
+def _broadcast_invalidation(base: str) -> None:
+    for fn in list(_INVALIDATION_LISTENERS):
+        try:
+            fn(base)
+        except Exception:
+            pass
 
 
 def trace_path(base: str) -> str:
@@ -109,6 +141,7 @@ def write_record(base: str, trace: list[int]) -> tuple[int, int]:
         np.save(trace_path(base) + ".tmp.npy", arr)
         os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
         WS_CACHE.invalidate(base)  # a fresh record obsoletes cached WS pages
+        _broadcast_invalidation(base)
     finally:
         src.close()
     return len(pages), len(pages) * PAGE
@@ -116,6 +149,7 @@ def write_record(base: str, trace: list[int]) -> tuple[int, int]:
 
 def drop_record(base: str) -> None:
     WS_CACHE.invalidate(base)
+    _broadcast_invalidation(base)
     for p in (trace_path(base), ws_path(base)):
         if os.path.exists(p):
             os.remove(p)
@@ -179,6 +213,8 @@ class WSCache:
         self.discarded = 0               # inserts dropped: raced an invalidate
         self.evicted = 0                 # LRU entries dropped at capacity
         self.peek_hits = 0               # remote-peer serves via peek()
+        self.group_fetches = 0           # fetches serving a restore group
+        self.group_instances = 0         # instances amortized over those
 
     def _lru_touch(self, base: str) -> None:
         if base in self._order:
@@ -195,9 +231,36 @@ class WSCache:
             self._bytes -= len(data)
             self.evicted += 1
 
-    def fetch(self, base: str, cfg: ReapConfig) -> tuple[list[int], bytes, bool]:
-        """Return (pages, data, cache_hit) for ``base``'s WS file."""
+    def _call_source(self, base: str, cfg: ReapConfig, group: int):
+        """Invoke the miss resolver, passing ``group`` through when the
+        source accepts it (the shard tier counts once-per-group remote
+        fetches); plain ``(base, cfg)`` sources keep working."""
+        import inspect
+        try:
+            params = inspect.signature(self.source).parameters
+            accepts = ("group" in params
+                       or any(p.kind is p.VAR_KEYWORD
+                              for p in params.values()))
+        except (TypeError, ValueError):
+            accepts = False
+        if accepts:
+            return self.source(base, cfg, group=group)
+        return self.source(base, cfg)
+
+    def fetch(self, base: str, cfg: ReapConfig,
+              group: int = 1) -> tuple[list[int], bytes, bool]:
+        """Return (pages, data, cache_hit) for ``base``'s WS file.
+
+        ``group`` declares how many instance restores this one fetch will
+        feed (a :class:`~repro.core.restore.RestoreBatch` fetches once per
+        group instead of once per instance) — it only affects accounting
+        and is forwarded to a group-aware ``source``.
+        """
         mtime = os.path.getmtime(ws_path(base))
+        if group > 1:
+            with self._lock:
+                self.group_fetches += 1
+                self.group_instances += group
         while True:
             with self._lock:
                 ent = self._entries.get(base)
@@ -216,7 +279,8 @@ class WSCache:
             # follower: wait for the leader's read, then re-check the entry
             ev.wait()
         try:
-            pages, data = (self.source or _read_ws)(base, cfg)
+            pages, data = (_read_ws(base, cfg) if self.source is None
+                           else self._call_source(base, cfg, group))
             with self._lock:
                 self.reads += 1
                 if self._gens.get(base, 0) == gen:
@@ -265,7 +329,9 @@ class WSCache:
             self._lru_touch(base)
             return ent[1], ent[2]
 
-    def invalidate(self, base: str) -> None:
+    def invalidate(self, base: str) -> bool:
+        """Drop ``base``'s entry; True when an entry was actually held (the
+        shard tier counts eager peer drops with this)."""
         with self._lock:
             if base in self._inflight:
                 # only an in-flight leader holds a generation snapshot, so
@@ -279,6 +345,7 @@ class WSCache:
                 self.invalidations += 1
             if base in self._order:
                 self._order.remove(base)
+            return dropped is not None
 
     def clear(self) -> None:
         with self._lock:
@@ -293,6 +360,7 @@ class WSCache:
             self.hits = self.misses = self.reads = 0
             self.invalidations = self.discarded = self.evicted = 0
             self.peek_hits = 0
+            self.group_fetches = self.group_instances = 0
 
     def stats(self) -> dict:
         with self._lock:
@@ -300,6 +368,8 @@ class WSCache:
                     "reads": self.reads, "invalidations": self.invalidations,
                     "discarded": self.discarded, "evicted": self.evicted,
                     "peek_hits": self.peek_hits,
+                    "group_fetches": self.group_fetches,
+                    "group_instances": self.group_instances,
                     "entries": len(self._entries), "bytes": self._bytes}
 
 
@@ -367,8 +437,15 @@ class Monitor:
 
     def start(self) -> None:
         if self.mode == "prefetch":
-            self.prefetched, self.prefetch_s, self.ws_cache_hit = (
-                prefetch_shared(self.arena, self.base, self.cfg, self.cache))
+            try:
+                self.prefetched, self.prefetch_s, self.ws_cache_hit = (
+                    prefetch_shared(self.arena, self.base, self.cfg,
+                                    self.cache))
+            except FileNotFoundError:
+                # a concurrent §7.2 re-record dropped the WS/trace files
+                # between mode selection and this prefetch: record afresh
+                # instead of failing the invocation
+                self.mode = "record"
 
     def finish(self) -> dict:
         """Called when the orchestrator receives the function response."""

@@ -1,0 +1,344 @@
+"""Staged cold-start restore pipeline + batched group restores.
+
+The paper's §4.2 latency split (load VMM / connection restore / prefetch /
+processing) used to be produced implicitly by ``FunctionInstance.__init__``
+doing blocking I/O in a constructor.  This module makes the restore path an
+explicit, separately-timed pipeline:
+
+    load_vmm -> connect -> ws_fetch -> install -> materialize
+
+and adds the group form the single-instance path cannot express: under
+concurrent load, N queued cold starts of one function used to run N full
+pipelines — N manifest parses, N WS-cache waits (single-flight followers
+blocking on the leader's read), and N serial per-page ``install_span``
+loops.  :class:`RestoreBatch` restores all N as **one** staged operation:
+
+  * one manifest parse (the layout is shared across the group's arenas),
+  * one WS fetch (a single cache transaction instead of leader+followers),
+  * one fused page-gather pass producing an ascending-page install block,
+  * N vectorized block installs (one scatter per arena, no per-page loop).
+
+The fuse step is the ``page_gather`` kernel's job description: reorder the
+trace-order WS into the contiguous block the installs want.  On a TPU
+backend the Pallas kernel (``kernels/page_gather``) runs it as a
+scalar-prefetched DMA sweep; on CPU the same permutation is a single numpy
+fancy-index (the kernel's interpret mode would cost more than it saves), so
+``fuse_engine="auto"`` picks per backend and both engines are parity-tested
+byte-for-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import time
+
+import numpy as np
+
+from .arena import PAGE, GuestMemoryFile
+from .reap import WS_CACHE, Monitor, ReapConfig, _read_ws, trace_path
+
+#: Stage names in execution order (benchmarks iterate this).
+STAGES = ("load_vmm", "connect", "ws_fetch", "install", "materialize")
+
+
+@dataclasses.dataclass
+class StageTimings:
+    """Per-stage wall-clock seconds of one pipeline run.
+
+    ``ws_fetch_s + install_s`` is the paper's "prefetch" segment;
+    ``materialize_s`` (param residency) only runs off-path (prewarms).
+    """
+    load_vmm_s: float = 0.0
+    connection_s: float = 0.0
+    ws_fetch_s: float = 0.0
+    install_s: float = 0.0
+    materialize_s: float = 0.0
+
+    @property
+    def prefetch_s(self) -> float:
+        return self.ws_fetch_s + self.install_s
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def connect_handshake() -> None:
+    """Real loopback handshake standing in for gRPC connection restore."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"PING")
+        assert b.recv(4) == b"PING"
+        b.sendall(b"PONG")
+        assert a.recv(4) == b"PONG"
+    finally:
+        a.close()
+        b.close()
+
+
+def default_fuse_engine() -> str:
+    """'pallas' on a TPU backend (the kernel compiles to a DMA sweep),
+    'numpy' elsewhere (interpret-mode Pallas is slower than the copy)."""
+    try:
+        import jax
+        if jax.default_backend() == "tpu":
+            return "pallas"
+    except Exception:
+        pass
+    return "numpy"
+
+
+def fuse_ws_block(pages, data: bytes, *, engine: str = "auto",
+                  interpret: bool | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """One fused gather pass over the trace-order WS bytes.
+
+    Returns ``(sorted_pages, block)`` where ``block[i]`` is the content of
+    arena page ``sorted_pages[i]`` — the WS permuted into ascending-page
+    order so each instance's install is a single monotonic scatter.
+
+    ``engine='pallas'`` runs the permutation through the
+    :func:`~repro.kernels.gather_pages` kernel (the TPU-native realization);
+    ``engine='numpy'`` is the vectorized host path.  Both produce identical
+    bytes (tested).  ``interpret`` of None compiles the kernel on TPU and
+    interprets elsewhere (interpret mode on the hot path would cost more
+    than the fuse saves).
+    """
+    idx = np.asarray(pages, dtype=np.int64)
+    ws = np.frombuffer(data, dtype=np.uint8,
+                       count=len(idx) * PAGE).reshape(len(idx), PAGE)
+    order = np.argsort(idx, kind="stable")
+    if engine == "auto":
+        engine = default_fuse_engine()
+    if engine == "pallas":
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels import gather_pages
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        block = np.asarray(gather_pages(
+            jnp.asarray(ws), jnp.asarray(order.astype(np.int32)),
+            interpret=interpret))
+    elif engine == "numpy":
+        block = np.ascontiguousarray(ws[order])
+    else:
+        raise ValueError(f"unknown fuse engine {engine!r}")
+    return idx[order], block
+
+
+class RestorePipeline:
+    """Explicit staged restore of one function instance's state.
+
+    Stages are separate methods so a group restore (:class:`RestoreBatch`)
+    can interleave them across instances — e.g. run every ``load_vmm``
+    against one parsed manifest, then one shared ``ws_fetch`` for the whole
+    group.  ``run()`` is the single-instance convenience that executes them
+    in order.
+
+    ``clock`` injects the timer (tests pass a fake clock so stage
+    attribution is deterministic); ``exec_restore`` is the jit-cache lookup
+    (Firecracker's device-state restore analogue) supplied by the serving
+    layer; ``connector`` stands in for the gRPC connection restore.
+    """
+
+    def __init__(self, base: str, reap: ReapConfig | None = None, *,
+                 mode: str | None = None, cache=None, exec_restore=None,
+                 connector=connect_handshake, clock=time.perf_counter):
+        self.base = base
+        self.reap = reap or ReapConfig()
+        self.mode = mode                 # None => auto; 'vanilla' => no REAP
+        self.cache = cache
+        self.exec_restore = exec_restore
+        self.connector = connector
+        self.clock = clock
+        self.timings = StageTimings()
+        self.gm: GuestMemoryFile | None = None
+        self.monitor: Monitor | None = None
+
+    # -- stages ---------------------------------------------------------
+
+    def load_vmm(self, layout=None) -> None:
+        """Manifest parse + arena map + executable-handle restore.
+
+        ``layout`` short-circuits the manifest parse with an
+        already-parsed :class:`~repro.core.arena.ArenaLayout` — a group
+        restore parses the manifest once and shares it.
+        """
+        t0 = self.clock()
+        self.gm = (GuestMemoryFile(self.base, layout) if layout is not None
+                   else GuestMemoryFile.open(self.base))
+        self.monitor = Monitor(self.gm, self.base, self.reap,
+                               mode=self.mode, cache=self.cache)
+        if self.exec_restore is not None:
+            self.exec_restore()
+        self.timings.load_vmm_s = self.clock() - t0
+
+    def connect(self) -> None:
+        t0 = self.clock()
+        self.connector()
+        self.timings.connection_s = self.clock() - t0
+
+    def ws_fetch(self, group: int = 1):
+        """Fetch the working set (REAP prefetch phase, read half).
+
+        Returns ``(pages, data, cache_hit)`` — ``data`` is None on the
+        "Parallel PFs" design point (``use_ws_file=False``), where the
+        install stage demand-reads the traced pages instead — or None when
+        this monitor is not in prefetch mode.
+
+        A concurrent §7.2 re-record may ``drop_record`` the WS file between
+        the monitor's mode selection and this fetch; the resulting
+        ``FileNotFoundError`` falls back to record mode (the §7.2 path)
+        instead of failing the invocation.
+        """
+        mon = self.monitor
+        if mon.mode != "prefetch":
+            return None
+        cfg = self.reap
+        t0 = self.clock()
+        try:
+            if not cfg.use_ws_file:
+                pages = [int(p) for p in np.load(trace_path(self.base))]
+                data, hit = None, False
+            elif cfg.share_ws_cache:
+                pages, data, hit = (self.cache or WS_CACHE).fetch(
+                    self.base, cfg, group=group)
+            else:
+                pages, data = _read_ws(self.base, cfg)
+                hit = False
+        except FileNotFoundError:
+            mon.mode = "record"          # record dropped under us: re-record
+            return None
+        self.timings.ws_fetch_s = self.clock() - t0
+        return pages, data, hit
+
+    def install(self, fetched) -> None:
+        """Single-instance eager install (per-page ``install_span`` path)."""
+        if fetched is None:
+            return
+        pages, data, hit = fetched
+        t0 = self.clock()
+        if data is None:
+            self.monitor.arena.touch_pages(
+                pages, parallel=max(self.reap.parallel_faults, 1))
+        else:
+            self.monitor.arena.install_span(pages, data)
+        self.timings.install_s = self.clock() - t0
+        self._mark_prefetched(len(pages), hit)
+
+    def install_block(self, sorted_pages: np.ndarray, block: np.ndarray,
+                      hit: bool, *, ws_fetch_s: float = 0.0) -> None:
+        """Fused group install: one vectorized scatter of the shared block.
+
+        ``ws_fetch_s`` charges this instance its share of the group's
+        single fetch (every member waited on it, like followers used to
+        wait on the single-flight leader).
+        """
+        t0 = self.clock()
+        self.monitor.arena.install_block(sorted_pages, block)
+        self.timings.install_s = self.clock() - t0
+        self.timings.ws_fetch_s = ws_fetch_s
+        self._mark_prefetched(len(sorted_pages), hit)
+
+    def materialize(self, fn) -> None:
+        """Timed post-install residency work (e.g. param materialization)."""
+        t0 = self.clock()
+        fn()
+        self.timings.materialize_s = self.clock() - t0
+
+    def _mark_prefetched(self, n_pages: int, hit: bool) -> None:
+        # keep the monitor's view consistent so finish() computes the
+        # residual-fault ratio (§7.2 re-record policy) exactly as before
+        mon = self.monitor
+        mon.prefetched = n_pages
+        mon.prefetch_s = self.timings.prefetch_s
+        mon.ws_cache_hit = hit
+
+    # -- convenience ----------------------------------------------------
+
+    def run(self) -> "RestorePipeline":
+        """Execute load_vmm → connect → ws_fetch → install in order."""
+        self.load_vmm()
+        self.connect()
+        self.install(self.ws_fetch())
+        return self
+
+    def close(self) -> None:
+        """Tear down a partially-restored pipeline (error paths)."""
+        if self.monitor is not None:
+            self.monitor.arena.close()
+
+
+class RestoreBatch:
+    """Restore N pipelines of ONE function as a single staged group.
+
+    All pipelines must target the same ``base``.  The group performs one
+    manifest parse, one WS fetch, and one fused gather pass; every member
+    then installs the shared block with one vectorized scatter.  With
+    ``len(pipes) == 1`` the batch degrades to the plain per-page pipeline
+    (identical semantics to an unbatched restore).
+
+    A mode fallback on the group's fetch (record dropped mid-restore)
+    propagates to every member: the whole group re-records, exactly as N
+    independent restores would have.
+    """
+
+    def __init__(self, pipes: list[RestorePipeline]):
+        if not pipes:
+            raise ValueError("empty restore batch")
+        bases = {p.base for p in pipes}
+        if len(bases) > 1:
+            raise ValueError(f"restore batch spans bases {sorted(bases)}")
+        self.pipes = pipes
+        self.fuse_s = 0.0                # the shared gather pass, once
+
+    def run(self) -> "RestoreBatch":
+        pipes = self.pipes
+        try:
+            layout = None
+            for p in pipes:
+                p.load_vmm(layout=layout)
+                layout = p.gm.layout     # manifest parsed once per group
+            for p in pipes:
+                p.connect()
+            leader = pipes[0]
+            fetched = leader.ws_fetch(group=len(pipes))
+            if fetched is None:
+                # record/vanilla mode — or the §7.2 fallback; every member
+                # must agree (followers may have resolved 'prefetch' from a
+                # record that a concurrent re-record has since dropped)
+                if leader.monitor.mode == "record":
+                    for p in pipes[1:]:
+                        p.monitor.mode = "record"
+                return self
+            pages, data, hit = fetched
+            if len(pipes) == 1 or data is None:
+                # single restore, or the "Parallel PFs" design point where
+                # every arena demand-reads its own pages (nothing to fuse)
+                for p in pipes:
+                    p.install(fetched)
+                return self
+            t0 = leader.clock()
+            sorted_pages, block = fuse_ws_block(
+                pages, data, engine=leader.reap.fuse_engine)
+            self.fuse_s = leader.clock() - t0
+            # the fuse pass and the fetch sit on every member's critical
+            # path — charge them to each report like follower waits were
+            fetch_s = leader.timings.ws_fetch_s + self.fuse_s
+            for p in pipes:
+                p.install_block(sorted_pages, block, hit, ws_fetch_s=fetch_s)
+            return self
+        except BaseException:
+            for p in pipes:
+                p.close()                # never leak half-restored arenas
+            raise
+
+    def stage_seconds(self) -> dict:
+        """Aggregate per-stage seconds across the group (+ the fuse pass)."""
+        out = {k: 0.0 for k in ("load_vmm_s", "connection_s", "ws_fetch_s",
+                                "install_s", "materialize_s")}
+        for p in self.pipes:
+            for k, v in p.timings.as_dict().items():
+                out[k] += v
+        out["fuse_s"] = self.fuse_s
+        return out

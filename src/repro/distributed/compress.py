@@ -62,8 +62,6 @@ def ef_psum(grads, errors, mesh, axes: tuple[str, ...]):
     all-reduce operand is int8), dequantizes with the max scale, and keeps
     its local residual.  Returns (mean_grads, new_errors).
     """
-    import jax.numpy as _jnp
-
     def local(g, e):
         q, s, ne = ef_compress(g.astype(jnp.float32), e)
         acc = jax.lax.psum(q.astype(jnp.int32), axes)   # int payload on the wire

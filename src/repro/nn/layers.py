@@ -14,7 +14,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .spec import TensorSpec, tensor
+from .spec import tensor
 
 # ---------------------------------------------------------------------------
 # Norms

@@ -1,5 +1,6 @@
 from .forecast import ForecastConfig, ForecastDemand, PeriodicityDetector
-from .instance import ExecutableCache, FunctionInstance, State
+from .instance import (ExecutableCache, FunctionInstance, State,
+                       restore_group)
 from .loadgen import (ClosedLoopGenerator, OpenLoopGenerator, Trace,
                       TraceEvent, azure_trace, diurnal_trace, poisson_trace,
                       uniform_trace)

@@ -10,21 +10,31 @@ Cold-start latency is split exactly as the paper measures it (§4.2):
                                data plane over a real socketpair handshake
                                (the persistent-gRPC analogue).
   * **(REAP) prefetch**     -- single large O_DIRECT read of the WS file +
-                               eager install (only in prefetch mode).
+                               eager install (only in prefetch mode); split
+                               into ``ws_fetch`` and ``install`` stages, the
+                               install fused across a restore group.
   * **Function processing** -- actual invocation, demand-faulting any page
                                not yet resident.
+
+The restore itself lives in :mod:`repro.core.restore`: a
+:class:`FunctionInstance` is a thin shell — its constructor does **no I/O**
+— that adopts the result of a :class:`~repro.core.restore.RestorePipeline`.
+:func:`restore_group` restores N instances of one function as a single
+staged batch (one manifest parse, one WS fetch, one fused gather pass, N
+vectorized installs).
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 import itertools
-import socket
 import threading
 import time
 
 from ..configs.base import ModelConfig
-from ..core import GuestMemoryFile, Monitor, ReapConfig, run_invocation
+from ..core import ReapConfig, run_invocation
 from ..core.reap import ColdStartReport
+from ..core.restore import RestoreBatch, RestorePipeline
 from ..models import get_family
 from ..nn import spec as nnspec
 
@@ -53,23 +63,13 @@ class ExecutableCache:
         warm_executables(cfg, example_batch)
 
 
-def _handshake() -> float:
-    """Real loopback handshake standing in for gRPC connection restore."""
-    t0 = time.perf_counter()
-    a, b = socket.socketpair()
-    try:
-        a.sendall(b"PING")
-        assert b.recv(4) == b"PING"
-        b.sendall(b"PONG")
-        assert a.recv(4) == b"PONG"
-    finally:
-        a.close()
-        b.close()
-    return time.perf_counter() - t0
-
-
 class FunctionInstance:
     """One sandboxed instance of a function (cfg), restored from snapshot.
+
+    The constructor only records identity — all restore I/O (manifest,
+    handshake, WS fetch, install) runs in :meth:`restore` /
+    :func:`restore_group` through the staged pipeline, so instances can be
+    built in bulk and restored as one batch.
 
     State transitions are lock-guarded so the router's worker pool, the
     keepalive reaper, and scale-to-zero can race safely: an instance is
@@ -90,32 +90,51 @@ class FunctionInstance:
         self.name = name
         self.cfg = cfg
         self.base = base
+        self.reap = reap
+        self.mode = mode
         self.prewarmed = prewarmed
+        self.ws_cache = ws_cache
         self.instance_id = next(FunctionInstance._ids)
         self._state_lock = threading.Lock()
         self.state = State.LOADING
         self.report = ColdStartReport()
         self.last_used = time.monotonic()
-
-        t0 = time.perf_counter()
-        self.gm = GuestMemoryFile.open(base)
-        if mode == "vanilla":
-            # baseline: ignore any WS record; always lazy page faults
-            self.monitor = Monitor(self.gm, base, reap, mode="vanilla",
-                                   cache=ws_cache)
-        else:
-            self.monitor = Monitor(self.gm, base, reap, cache=ws_cache)
-        ExecutableCache.get(cfg)
-        self.report.load_vmm_s = time.perf_counter() - t0
-
-        self.report.connection_s = _handshake()
-        self.monitor.start()
-        self.report.prefetch_s = self.monitor.prefetch_s
-        self.report.n_prefetched_pages = self.monitor.prefetched
-        self.report.ws_cache_hit = self.monitor.ws_cache_hit
-        self.state = State.IDLE
+        self.gm = None
+        self.monitor = None
         self._warm_params = None
         self._n_invocations = 0
+
+    # -- restore (thin shell over core/restore.py) ---------------------
+
+    def _pipeline(self) -> RestorePipeline:
+        mode = "vanilla" if self.mode == "vanilla" else None
+        return RestorePipeline(
+            self.base, self.reap, mode=mode, cache=self.ws_cache,
+            exec_restore=lambda: ExecutableCache.get(self.cfg))
+
+    def _adopt(self, pipe: RestorePipeline, batch_size: int = 1) -> None:
+        """Take ownership of a completed pipeline's state and map its stage
+        timings onto the §4.2 report split."""
+        self.gm = pipe.gm
+        self.monitor = pipe.monitor
+        t = pipe.timings
+        self.report = dataclasses.replace(
+            self.report,
+            load_vmm_s=t.load_vmm_s,
+            connection_s=t.connection_s,
+            prefetch_s=t.prefetch_s,       # = ws_fetch_s + install_s
+            install_s=t.install_s,
+            n_prefetched_pages=pipe.monitor.prefetched,
+            ws_cache_hit=pipe.monitor.ws_cache_hit,
+            prewarmed=self.prewarmed,
+            batch_size=batch_size)
+        self.last_used = time.monotonic()
+        self.state = State.IDLE
+
+    def restore(self) -> "FunctionInstance":
+        """Run the full staged restore for this instance alone."""
+        restore_group([self])
+        return self
 
     # -- state machine -------------------------------------------------
 
@@ -148,7 +167,6 @@ class FunctionInstance:
 
     def invoke(self, batch: dict, *, parallel_faults: int = 0):
         """Process one invocation; first call is cold, later calls warm."""
-        import dataclasses as _dc
         stats = self.monitor.arena.stats
         f0, fs0 = stats.n_faults, stats.fault_seconds
         t0 = time.perf_counter()
@@ -166,11 +184,12 @@ class FunctionInstance:
         # the first (cold) invocation only — and never to an invocation on a
         # prewarmed instance, whose restore ran off the critical path
         on_path = first and not self.prewarmed
-        self.report = _dc.replace(
+        self.report = dataclasses.replace(
             self.report,
             load_vmm_s=self.report.load_vmm_s if on_path else 0.0,
             connection_s=self.report.connection_s if on_path else 0.0,
             prefetch_s=self.report.prefetch_s if on_path else 0.0,
+            install_s=self.report.install_s if on_path else 0.0,
             n_prefetched_pages=self.report.n_prefetched_pages if on_path else 0,
             ws_cache_hit=self.report.ws_cache_hit if on_path else False,
             prewarmed=self.prewarmed,
@@ -207,5 +226,35 @@ class FunctionInstance:
         mid-invocation); prefer :meth:`try_reclaim` on shared paths."""
         with self._state_lock:
             self.state = State.RECLAIMED
-        self.monitor.arena.close()
+        if self.monitor is not None:
+            self.monitor.arena.close()
         self._warm_params = None
+
+
+def restore_group(instances: list[FunctionInstance], *,
+                  materialize: bool = False) -> list[FunctionInstance]:
+    """Restore N instances of ONE function as a single staged batch.
+
+    The batch performs one manifest parse, one WS fetch and one fused
+    page-gather pass for the whole group, then one vectorized install per
+    arena — instead of N full pipelines with N single-flight cache waits
+    and N per-page install loops.  ``materialize=True`` additionally makes
+    every instance warm (param residency) inside the timed ``materialize``
+    stage (the prewarm path).
+    """
+    pipes = [inst._pipeline() for inst in instances]
+    RestoreBatch(pipes).run()
+    k = len(instances)
+    for inst, pipe in zip(instances, pipes):
+        inst._adopt(pipe, batch_size=k)
+    if materialize:
+        try:
+            for inst, pipe in zip(instances, pipes):
+                pipe.materialize(inst.make_warm)
+        except BaseException:
+            # a failed materialization (e.g. records dropped mid-spawn)
+            # must not leak the group's already-adopted arenas
+            for inst in instances:
+                inst.reclaim()
+            raise
+    return instances

@@ -6,6 +6,14 @@ Per the paper's AWS-Lambda model, one instance processes one invocation at
 a time; concurrent invocations of the same function spawn additional
 instances (Fig. 9's scalability experiment drives exactly this path).
 
+Cold starts run through the staged restore pipeline (core/restore.py) and
+are **batched**: when the router reports a queue of same-function cold
+waiters (``group_hint``), :meth:`Orchestrator.invoke` restores the whole
+group through :meth:`spawn_batch` — one WS fetch and one fused install pass
+for N instances — parking the extras in the function's *fresh pool* for the
+waiters to claim.  Prewarm bursts take the same path (one group restore per
+``prewarm`` call instead of n single-instance pipelines).
+
 Every public method is thread-safe: the router's worker pool (router.py)
 calls :meth:`invoke` from many threads while the keepalive reaper runs
 concurrently.  Instances move IDLE -> BUSY only via
@@ -24,14 +32,19 @@ from typing import Any
 from ..configs.base import ModelConfig
 from ..core import ReapConfig, build_instance_snapshot
 from ..core.reap import ColdStartReport, drop_record
-from .instance import FunctionInstance
+from .instance import FunctionInstance, restore_group
 
 
 class FunctionRecord:
     """Per-function state: snapshot base, warm pool, invocation stats.
 
-    ``lock`` guards ``idle`` and ``stats``; ``n_spawned`` / ``n_invocations``
-    / ``n_prewarmed`` are monotone counters updated under the same lock.
+    ``lock`` is a condition variable guarding ``idle``, ``fresh`` and
+    ``stats``; ``n_spawned`` / ``n_invocations`` / ``n_prewarmed`` are
+    monotone counters updated under the same lock.  ``fresh`` holds
+    batch-restored instances that have never served an invocation: a cold
+    arrival that claims one still pays (reports) the group's restore split.
+    ``batch_pending`` counts fresh instances an in-flight group restore
+    will deliver — cold arrivals wait on it instead of spawning duplicates.
 
     ``warm_limit`` / ``keepalive_s`` are per-function overrides (None =>
     inherit the orchestrator-wide default); ``min_warm`` is the adaptive
@@ -43,10 +56,13 @@ class FunctionRecord:
         self.name = name
         self.cfg = cfg
         self.base = base
-        self.lock = threading.Lock()
+        self.lock = threading.Condition()
         self.idle: list[FunctionInstance] = []
+        self.fresh: list[FunctionInstance] = []
+        self.batch_pending = 0
         self.stats: list[ColdStartReport] = []
         self.n_spawned = 0
+        self.n_batched = 0               # instances restored in groups > 1
         self.n_invocations = 0
         self.n_prewarmed = 0
         self.n_prewarming = 0            # prewarms currently on pool threads
@@ -115,8 +131,8 @@ class Orchestrator:
     def scale_to_zero(self, name: str) -> None:
         rec = self.functions[name]
         with rec.lock:
-            keep = [i for i in rec.idle if not i.try_reclaim()]
-            rec.idle = keep
+            rec.idle = [i for i in rec.idle if not i.try_reclaim()]
+            rec.fresh = [i for i in rec.fresh if not i.try_reclaim()]
 
     def set_policy(self, name: str, *, warm_limit: int | None = None,
                    keepalive_s: float | None = None,
@@ -143,16 +159,17 @@ class Orchestrator:
             return len(rec.idle)
 
     def prewarm(self, name: str, n: int, *, wait: bool = False) -> int:
-        """Pre-spawn up to ``n`` warm instances of ``name`` on pool threads.
+        """Pre-spawn up to ``n`` warm instances of ``name`` on a pool thread.
 
         The cold-start cost (load VMM, connection restore, WS prefetch,
         param materialization) is paid here — *off* every invocation's
-        critical path.  Spawns are capped so the idle pool never exceeds the
+        critical path — and the whole burst restores as **one** group
+        (one WS fetch, one fused install pass) instead of n single-flight
+        pipelines.  Spawns are capped so the idle pool never exceeds the
         function's warm limit, counting prewarms already in flight.
         Returns the number of spawns actually scheduled.
         """
         rec = self.functions[name]
-        scheduled = 0
         with self._lock:
             if self._closed:             # never resurrect the pool after close
                 return 0
@@ -161,19 +178,21 @@ class Orchestrator:
                     max_workers=self.prewarm_concurrency,
                     thread_name_prefix="prewarm")
             pool = self._prewarm_pool
-        for _ in range(n):
-            with rec.lock:
-                limit = self._effective_warm_limit(rec)
-                if len(rec.idle) + rec.n_prewarming >= limit:
-                    break
-                rec.n_prewarming += 1
+        with rec.lock:
+            limit = self._effective_warm_limit(rec)
+            allowed = min(n, limit - len(rec.idle) - rec.n_prewarming)
+            if allowed <= 0:
+                scheduled = 0
+            else:
+                rec.n_prewarming += allowed
+                scheduled = allowed
+        if scheduled:
             try:
-                fut = pool.submit(self._prewarm_one, rec)
+                fut = pool.submit(self._prewarm_group, rec, scheduled)
             except RuntimeError:        # pool shut down by a concurrent close
                 with rec.lock:
-                    rec.n_prewarming -= 1
-                break
-            scheduled += 1
+                    rec.n_prewarming -= scheduled
+                return 0
             with self._lock:
                 self._prewarm_futures = (
                     [f for f in self._prewarm_futures if not f.done()] + [fut])
@@ -193,41 +212,42 @@ class Orchestrator:
             left = None if deadline is None else deadline - time.monotonic()
             f.result(left)
 
-    def _prewarm_one(self, rec: FunctionRecord) -> None:
-        inst = None
+    def _prewarm_group(self, rec: FunctionRecord, n: int) -> None:
+        insts: list[FunctionInstance] = []
         try:
-            mode = "vanilla" if self.mode == "vanilla" else "auto"
-            inst = FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
-                                    mode=mode, prewarmed=True,
-                                    ws_cache=self.ws_cache)
-            inst.make_warm()         # params memory-resident before any arrival
-            if inst.monitor.mode == "record":
+            insts = self.spawn_batch(rec.name, n, prewarmed=True,
+                                     materialize=True)
+            if insts[0].monitor.mode == "record":
                 # No WS record existed yet (function was never cold-invoked):
                 # persist one from the pages make_warm just faulted, so REAP
                 # prefetch engages on the next true cold start instead of the
                 # function staying permanently recordless behind warm pools.
                 # A mispredicted record self-corrects via the §7.2 re-record
                 # fallback.
-                inst.finish_cold()
+                for inst in insts:
+                    inst.finish_cold()
+            leftover: list[FunctionInstance] = []
             with rec.lock:
-                rec.n_spawned += 1
-                rec.n_prewarmed += 1
-                if len(rec.idle) < self._effective_warm_limit(rec):
-                    rec.idle.append(inst)
-                    return
-            inst.try_reclaim()       # limit shrank while we were spawning
+                rec.n_prewarmed += len(insts)
+                for inst in insts:
+                    if len(rec.idle) < self._effective_warm_limit(rec):
+                        rec.idle.append(inst)
+                    else:
+                        leftover.append(inst)  # limit shrank mid-spawn
+            for inst in leftover:
+                inst.try_reclaim()
         except BaseException as e:
             # a failed prewarm (e.g. records dropped mid-spawn) must neither
-            # leak the half-built instance nor detonate later out of a
-            # Future in prewarm_quiesce — record it and move on
+            # leak half-built instances nor detonate later out of a Future
+            # in prewarm_quiesce — record it and move on
             with rec.lock:
                 rec.n_prewarm_failures += 1
                 rec.last_prewarm_error = e
-            if inst is not None:
+            for inst in insts:
                 inst.reclaim()
         finally:
             with rec.lock:
-                rec.n_prewarming -= 1
+                rec.n_prewarming -= n
 
     def reap_idle(self) -> int:
         """Keepalive sweep: reclaim instances idle past the deadline.
@@ -235,7 +255,9 @@ class Orchestrator:
         Safe to run concurrently with ``invoke``: an instance that a worker
         just acquired is BUSY and ``try_reclaim`` refuses it.  Never shrinks
         a function's idle pool below its policy floor (``min_warm``), so an
-        adaptive target survives keepalive expiry.
+        adaptive target survives keepalive expiry.  Fresh (batch-restored,
+        never-invoked) instances expire on the same deadline but are not
+        protected by the floor — they are surplus from an over-sized group.
         """
         now = time.monotonic()
         n = 0
@@ -257,6 +279,13 @@ class Orchestrator:
                     else:
                         keep.append(inst)
                 rec.idle = keep
+                stale = [i for i in rec.fresh
+                         if now - i.last_used > keepalive]
+                if stale:
+                    rec.fresh = [i for i in rec.fresh if i not in stale]
+            for inst in stale:
+                if inst.try_reclaim():
+                    n += 1
         return n
 
     def close(self) -> None:
@@ -276,10 +305,48 @@ class Orchestrator:
 
     # -- data plane ------------------------------------------------------
 
-    def _acquire_instance(self, rec: FunctionRecord,
-                          force_cold: bool) -> tuple[FunctionInstance, bool]:
-        """Pop a warm instance (atomically marking it BUSY) or cold-start a
-        new one.  Returns (instance, was_cold)."""
+    def spawn_batch(self, name: str, n: int, *, prewarmed: bool = False,
+                    materialize: bool = False) -> list[FunctionInstance]:
+        """Restore ``n`` instances of ``name`` as ONE staged group.
+
+        The group shares a single manifest parse, a single WS fetch and a
+        single fused page-gather pass (core/restore.py); each instance then
+        installs the shared block with one vectorized scatter.  Returns the
+        instances (IDLE, not parked anywhere).
+        """
+        rec = self.functions[name]
+        n = max(1, n)
+        mode = "vanilla" if self.mode == "vanilla" else "auto"
+        insts = [FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
+                                  mode=mode, prewarmed=prewarmed,
+                                  ws_cache=self.ws_cache)
+                 for _ in range(n)]
+        restore_group(insts, materialize=materialize)
+        with rec.lock:
+            rec.n_spawned += n
+            if n > 1:
+                rec.n_batched += n
+        return insts
+
+    def _pop_fresh_locked(self, rec: FunctionRecord):
+        while rec.fresh:
+            inst = rec.fresh.pop()
+            if inst.try_acquire():
+                return inst
+            # lost a race with a reaper; instance is already dead
+        return None
+
+    def _acquire_instance(self, rec: FunctionRecord, force_cold: bool,
+                          group_hint: int = 1) -> tuple[FunctionInstance, bool]:
+        """Pop a warm instance (atomically marking it BUSY) or cold-start.
+
+        The cold path is group-aware: a fresh (batch-restored) instance is
+        claimed first; else, while a group restore is in flight
+        (``batch_pending``), the caller waits for its delivery instead of
+        spawning a duplicate; else it becomes the spawner for a group of up
+        to ``group_hint`` (1 + the same-function cold waiters the router
+        saw queued behind this invocation).  Returns (instance, was_cold).
+        """
         if not force_cold:
             with rec.lock:
                 while rec.idle:
@@ -287,13 +354,37 @@ class Orchestrator:
                     if inst.try_acquire():
                         return inst, False
                     # lost a race with a reaper; instance is already dead
-        mode = "vanilla" if self.mode == "vanilla" else "auto"
-        inst = FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
-                                mode=mode, ws_cache=self.ws_cache)
-        inst.try_acquire()
+        extra = 0
         with rec.lock:
-            rec.n_spawned += 1
-        return inst, True
+            while True:
+                inst = self._pop_fresh_locked(rec)
+                if inst is not None:
+                    return inst, True
+                if rec.batch_pending > 0:
+                    # a group restore in flight will deliver fresh
+                    # instances; joining it beats spawning a duplicate.
+                    # The timeout is a liveness backstop (a delivery
+                    # notify can never be missed under the condvar).
+                    rec.lock.wait(timeout=60.0)
+                    continue
+                # become the spawner; cover waiters the router saw queued,
+                # minus restores already in flight for them
+                extra = max(0, group_hint - 1)
+                rec.batch_pending += extra
+                break
+        try:
+            insts = self.spawn_batch(rec.name, 1 + extra)
+        except BaseException:
+            with rec.lock:
+                rec.batch_pending -= extra
+                rec.lock.notify_all()    # waiters fall through to self-spawn
+            raise
+        insts[0].try_acquire()
+        with rec.lock:
+            rec.fresh.extend(insts[1:])
+            rec.batch_pending -= extra
+            rec.lock.notify_all()
+        return insts[0], True
 
     def _release_instance(self, rec: FunctionRecord, inst: FunctionInstance,
                           report: ColdStartReport) -> None:
@@ -308,11 +399,16 @@ class Orchestrator:
                 return
         inst.try_reclaim()
 
-    def invoke(self, name: str, batch: dict,
-               *, force_cold: bool = False) -> tuple[Any, ColdStartReport]:
-        """Route one invocation; cold-starts a new instance if needed."""
+    def invoke(self, name: str, batch: dict, *, force_cold: bool = False,
+               group_hint: int = 1) -> tuple[Any, ColdStartReport]:
+        """Route one invocation; cold-starts a new instance if needed.
+
+        ``group_hint`` (from the router) is the number of same-function
+        invocations — this one included — believed to need cold instances
+        right now; a cold start restores that many as one batch.
+        """
         rec = self.functions[name]
-        inst, cold = self._acquire_instance(rec, force_cold)
+        inst, cold = self._acquire_instance(rec, force_cold, group_hint)
         try:
             logits, _ = inst.invoke(
                 batch, parallel_faults=self.reap.parallel_faults)

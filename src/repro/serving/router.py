@@ -44,6 +44,12 @@ class RouterConfig:
     max_concurrency: int = 8            # worker-pool size (global)
     max_instances_per_function: int = 8  # queue-or-spawn threshold
     queue_depth: int = 1024             # per-function backlog bound
+    # Group-restore ceiling: a worker dispatching a cold invocation counts
+    # the same-function waiters still queued behind it and the orchestrator
+    # restores the whole group as ONE batch (one WS fetch, one fused
+    # install pass — core/restore.py).  1 disables batching (every cold
+    # start runs its own pipeline, pre-PR-5 behaviour).
+    batch_restore_limit: int = 8
 
 
 class Invocation:
@@ -55,6 +61,7 @@ class Invocation:
         self.force_cold = force_cold
         self.t_submit = time.perf_counter()
         self.queue_s = 0.0
+        self.group_hint = 1              # set at dispatch: cold-group size
         self._done = threading.Event()
         self._output: Any = None
         self._report: ColdStartReport | None = None
@@ -251,7 +258,16 @@ class Router:
             q = self._queues[name]
             if q and self._inflight[name] < self.cfg.max_instances_per_function:
                 self._inflight[name] += 1
-                return q.popleft()
+                inv = q.popleft()
+                # group-restore hint: same-function waiters still queued
+                # behind this invocation that the instance budget will let
+                # dispatch concurrently — if this dispatch goes cold, the
+                # orchestrator restores the whole group as one batch
+                budget = (self.cfg.max_instances_per_function
+                          - self._inflight[name])
+                inv.group_hint = 1 + min(
+                    len(q), budget, max(self.cfg.batch_restore_limit - 1, 0))
+                return inv
         return None
 
     def _worker_loop(self) -> None:
@@ -266,7 +282,8 @@ class Router:
             inv.queue_s = time.perf_counter() - inv.t_submit
             try:
                 out, rep = self.orch.invoke(inv.name, inv.batch,
-                                            force_cold=inv.force_cold)
+                                            force_cold=inv.force_cold,
+                                            group_hint=inv.group_hint)
                 rep = dataclasses.replace(rep, queue_s=inv.queue_s)
                 inv._resolve(out, rep)
             except BaseException as e:  # propagate to the waiter, keep serving
@@ -303,4 +320,10 @@ def summarize(reports: list[ColdStartReport]) -> dict:
         "cold": cold,
         "cold_fraction": cold / max(len(reports), 1),
         "prewarmed": sum(1 for r in reports if r.prewarmed),
+        # group-restore attribution (restore.py): invocations whose cold
+        # instance was restored in a batch, and the install-stage cost
+        "batched": sum(1 for r in reports
+                       if r.load_vmm_s > 0 and r.batch_size > 1),
+        "install_mean_s": (sum(r.install_s for r in reports)
+                          / max(len(reports), 1)),
     }

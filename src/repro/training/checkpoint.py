@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.arena import PAGE, ArenaLayout, GuestMemoryFile, InstanceArena, PageSource
+from ..core.arena import ArenaLayout, GuestMemoryFile, InstanceArena, PageSource
 from ..nn import spec as nnspec
 
 

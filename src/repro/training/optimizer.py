@@ -8,7 +8,6 @@ makes REAP-accelerated checkpoint *restart* work: params + opt state are a
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

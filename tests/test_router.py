@@ -28,14 +28,16 @@ def served(tmp_path_factory):
 
 
 def test_concurrent_cold_starts_share_one_ws_read(served):
-    """N concurrent cold-starts => N distinct instances, one WS-file read."""
+    """N concurrent unbatched cold-starts => N distinct instances, one
+    WS-file read (the single-flight leader/follower property)."""
     orch, batch = served
     WS_CACHE.clear()
     WS_CACHE.reset_stats()
     n = 6
     spawned0 = orch.functions["fn"].n_spawned
     router = Router(orch, RouterConfig(max_concurrency=n,
-                                       max_instances_per_function=n))
+                                       max_instances_per_function=n,
+                                       batch_restore_limit=1))
     results = router.map([("fn", batch)] * n, force_cold=True)
     router.close()
 
@@ -46,11 +48,41 @@ def test_concurrent_cold_starts_share_one_ws_read(served):
         assert r.load_vmm_s > 0          # all cold
         assert r.n_prefetched_pages > 0  # all took the REAP prefetch path
         assert r.queue_s >= 0
+        assert r.batch_size == 1         # batching disabled
     # the headline property: one underlying read, everyone else hits
     s = WS_CACHE.stats()
     assert s["reads"] == 1
     assert s["hits"] == n - 1
     assert sum(r.ws_cache_hit for r in reports) == n - 1
+    orch.scale_to_zero("fn")
+
+
+def test_concurrent_cold_starts_batch_into_group_restores(served):
+    """With batching on, a same-function cold burst restores as group(s):
+    still one underlying WS read, but via far fewer cache transactions
+    than invocations (the leader+followers pattern collapses), and every
+    report still carries the full §4.2 split."""
+    orch, batch = served
+    WS_CACHE.clear()
+    WS_CACHE.reset_stats()
+    n = 6
+    spawned0 = orch.functions["fn"].n_spawned
+    router = Router(orch, RouterConfig(max_concurrency=n,
+                                       max_instances_per_function=n,
+                                       batch_restore_limit=n))
+    results = router.map([("fn", batch)] * n, force_cold=True)
+    router.close()
+
+    reports = [r for _, r in results]
+    assert len(reports) == n
+    assert orch.functions["fn"].n_spawned - spawned0 == n
+    for r in reports:
+        assert r.load_vmm_s > 0 and r.connection_s > 0   # all cold, full split
+        assert r.n_prefetched_pages > 0
+        assert r.prefetch_s >= r.install_s >= 0
+    s = WS_CACHE.stats()
+    assert s["reads"] == 1               # the invariant batching preserves
+    assert s["hits"] + s["misses"] <= n  # ...with fewer cache transactions
     orch.scale_to_zero("fn")
 
 
