@@ -50,21 +50,25 @@ def _build_cluster(store_dir, cfg, names, request, *, n_nodes, placement,
                    quick, demand=None, max_instances_per_function=2,
                    replication=1):
     from repro.cluster import ScheduleConfig, TransferModel, build_fleet
-    from repro.serving import PolicyConfig
+    from repro.serving import PolicyConfig, RouterConfig, ServeConfig
 
     # ~1 GbE with sub-ms RPC: slow enough that a smoke-sized WS (a few MB)
     # pays a visible transfer cost, so tier placement shows up in p95
-    cluster = build_fleet(
-        n_nodes, store_dir,
-        cfg=ScheduleConfig(placement=placement, seed=42),
-        demand=demand, replication=replication,
-        transfer=TransferModel(latency_s=1e-3, gbps=1.0),
-        cache_capacity_bytes=256 << 20,
-        max_concurrency=2,
-        max_instances_per_function=max_instances_per_function,
+    serve = ServeConfig(
         keepalive_s=2.0, warm_limit=4,
+        router=RouterConfig(
+            max_concurrency=2,
+            max_instances_per_function=max_instances_per_function,
+            queue_depth=256, batch_restore_limit=8),
         policy=PolicyConfig(interval_s=0.05, window_s=2.0, max_warm=4,
-                            min_keepalive_s=0.5))
+                            min_keepalive_s=0.5),
+        demand=demand,
+        transfer=TransferModel(latency_s=1e-3, gbps=1.0))
+    cluster = build_fleet(
+        n_nodes, store_dir, config=serve,
+        cfg=ScheduleConfig(placement=placement, seed=42),
+        replication=replication,
+        cache_capacity_bytes=256 << 20)
     for i, name in enumerate(names):
         cluster.register(name, cfg, seed=i,
                          warmup_batch=request if i == 0 else None)
@@ -126,6 +130,8 @@ def _arm_metrics(cluster, results, label, verbose, skip_until_s=0.0):
         "transfer_mb": round(st["transfer_bytes"] / 1e6, 3),
         "rerouted": cluster.n_rerouted,
         "placements": cluster.stats()["placements"],
+        "stage_seconds": {k: round(v, 6)
+                          for k, v in s["stage_seconds"].items()},
     }
     if verbose:
         print(f"  {label:22s} cold={out['cold']:3d}/{out['served']:3d} "

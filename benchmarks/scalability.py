@@ -32,6 +32,11 @@ single-flight WS-cache waits, k per-page installs) and on (one staged
 batch: one WS fetch, one fused gather pass, k vectorized installs —
 core/restore.py), reporting WS reads/waits, install seconds and cold p95.
 
+Plus an **overlapped-restore A/B**: the same k-deep burst with the install
+stage split into an eager hot prefix + background tail (``overlap_install``)
+vs the fully-resident PR 5 pipeline, reporting TTFB (cold e2e p95), TTFR
+(wall time until every tail quiesced) and the tail-fault-wait breakdown.
+
 ``--quick`` also writes a ``BENCH_scalability.json`` artifact (uploaded by
 CI) so the perf trajectory is tracked over time.
 
@@ -198,6 +203,111 @@ def run_burst_ab(function: str = "olmo-1b", *, quick: bool = False,
     return out
 
 
+def run_overlap_ab(function: str = "olmo-1b", *, quick: bool = False,
+                   verbose: bool = True) -> dict:
+    """Overlapped (hot prefix + background tail) vs fully-resident restore.
+
+    Both arms replay the *same* k-deep same-function cold burst against the
+    same recorded WS (identical store, identical staged router release), so
+    the only difference is the restore pipeline's install contract:
+
+      * ``resident`` — PR 5 behaviour (``overlap_install=False``): the whole
+        fused WS block installs before the instance is returned, so time to
+        first byte (TTFB) == time to fully resident (TTFR).
+      * ``overlap``  — install the recorded hot prefix eagerly, return the
+        instance, and let a background tail finish the WS; a fault on a
+        not-yet-installed page blocks on the in-flight install (attributed
+        to ``stage_seconds.tail_wait_s``, not to disk faults).
+
+    Reported per arm: restore-path p95 (TTFB — how long the router waits
+    before the instance can serve), cold e2e p95, wall time to all
+    responses, wall time until every tail quiesced (TTFR), and the
+    tail-fault-wait breakdown.  The overlap arm trades a longer TTFR for a
+    shorter TTFB.
+    """
+    from repro.configs import SMOKES
+    from repro.core.reap import WS_CACHE
+    from repro.serving import (Orchestrator, Router, RouterConfig,
+                               ServeConfig, percentile, summarize)
+
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
+    store = common.ensure_store()
+    request = common.make_request(cfg, seed=1)
+    name = ("ovlq" if quick else "ovl") + f"_{function}"
+
+    # record phase: shared by both arms (same store, same function name)
+    rec_orch = Orchestrator(store, ServeConfig(overlap_install=False,
+                                               warm_limit=0))
+    rec_orch.register(name, cfg, warmup_batch=request)
+    rec_orch.invoke(name, request)
+    rec_orch.scale_to_zero(name)
+    rec_orch.close()
+
+    k = 8
+    out: dict = {"k": k}
+    for arm, overlap in (("resident", False), ("overlap", True)):
+        common.drop_caches()
+        WS_CACHE.clear()
+        WS_CACHE.reset_stats()
+        orch = Orchestrator(store, ServeConfig(overlap_install=overlap,
+                                               warm_limit=0))
+        orch.register(name, cfg)
+        router = Router(orch, RouterConfig(
+            max_concurrency=k, max_instances_per_function=k,
+            batch_restore_limit=k), start=False)
+        invs = [router.submit(name, request, force_cold=True)
+                for _ in range(k)]
+        t0 = time.perf_counter()
+        router.start()
+        reports = [inv.result(timeout=600)[1] for inv in invs]
+        ttfb_wall = time.perf_counter() - t0
+        orch.tail_quiesce(timeout=600)
+        ttfr_wall = time.perf_counter() - t0
+        router.close()
+        s = summarize(reports)
+        tails = orch.tail_stats()
+        cold = [r for r in reports if r.load_vmm_s > 0]
+        cold_e2e = [r.e2e_s for r in cold]
+        # Restore-path TTFB: how long the router waited before the instance
+        # could take its invocation (load VMM + connect + eager WS
+        # fetch+install).  e2e adds the request's own compute, which is
+        # identical in both arms and dominated by CPU contention at k=8.
+        restore = [r.load_vmm_s + r.connection_s + r.prefetch_s
+                   for r in cold]
+        out[arm] = {
+            "cold": s["cold"],
+            "cold_restore_p95_s": round(percentile(restore, 95), 6),
+            "cold_e2e_p95_s": round(percentile(cold_e2e, 95), 6),
+            "ttfb_wall_s": round(ttfb_wall, 6),
+            "ttfr_wall_s": round(ttfr_wall, 6),
+            "tails_spawned": tails["tracked"],
+            "tails_demoted": tails["demoted"],
+            "tail_waits": s["tail_waits"],
+            "stage_seconds": {key: round(v, 6)
+                              for key, v in s["stage_seconds"].items()},
+        }
+        orch.scale_to_zero(name)
+        orch.close()
+        if verbose:
+            o = out[arm]
+            print(f"  overlap k={k} {arm:9s} "
+                  f"restore_p95={o['cold_restore_p95_s']*1e3:7.1f}ms "
+                  f"cold_e2e_p95={o['cold_e2e_p95_s']*1e3:7.1f}ms "
+                  f"ttfr_wall={o['ttfr_wall_s']*1e3:7.1f}ms "
+                  f"tail_waits={o['tail_waits']} "
+                  f"tail_wait_s={o['stage_seconds']['tail_wait_s']*1e3:.2f}ms")
+    base, ovl = out["resident"], out["overlap"]
+    if ovl["cold_restore_p95_s"] > 0:
+        out["ttfb_speedup"] = round(
+            base["cold_restore_p95_s"] / ovl["cold_restore_p95_s"], 3)
+        if verbose:
+            print(f"  overlap k={k} TTFB speedup: {out['ttfb_speedup']:.2f}x "
+                  f"(resident restore p95 "
+                  f"{base['cold_restore_p95_s']*1e3:.1f}ms -> "
+                  f"overlap {ovl['cold_restore_p95_s']*1e3:.1f}ms)")
+    return out
+
+
 def _trace_metrics(results, label: str, verbose: bool,
                    skip_until_s: float = 0.0) -> dict:
     """Metrics over the steady-state window (events at ``t >=
@@ -345,13 +455,15 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
     return out
 
 
-def write_artifact(fig9_rows, policy_ab: dict, burst_ab: dict) -> None:
+def write_artifact(fig9_rows, policy_ab: dict, burst_ab: dict,
+                   overlap_ab: dict | None = None) -> None:
     artifact = {
         "benchmark": "scalability",
         "fig9": [{"label": label, "us_per_call": us, "derived": derived}
                  for label, us, derived in fig9_rows],
         "policy_ab": policy_ab,
         "burst_ab": burst_ab,
+        "overlap_ab": overlap_ab or {},
     }
     with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=2)
@@ -378,6 +490,8 @@ def main(argv=None):
     rows = run(args.function, quick=args.quick)
     print("\n-- burst-restore A/B: batched vs unbatched group cold starts --")
     burst = run_burst_ab(args.function, quick=args.quick)
+    print("\n-- overlapped-restore A/B: hot prefix + tail vs fully resident --")
+    overlap = run_overlap_ab(args.function, quick=args.quick)
     ab: dict = {}
     if args.policy != "off":
         arms = (("reactive", "adaptive", "forecast")
@@ -385,7 +499,7 @@ def main(argv=None):
         ab = run_policy_ab(args.function, quick=args.quick, arms=arms,
                            trace_file=args.trace_file)
     if args.quick:
-        write_artifact(rows, ab, burst)
+        write_artifact(rows, ab, burst, overlap)
 
 
 if __name__ == "__main__":

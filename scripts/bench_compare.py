@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Compare quick-mode benchmark artifacts against committed baselines.
+
+CI runs the quick benchmarks (``benchmarks.scalability --quick``,
+``benchmarks.cluster --quick``), which write ``BENCH_scalability.json`` /
+``BENCH_cluster.json`` at the repo root; this script diffs the headline
+metrics against the seeds committed under ``benchmarks/baselines/`` and
+exits non-zero when a guarded metric regressed past the threshold
+(default 25%).
+
+Guarded metrics (chosen for run-to-run stability on shared CI runners —
+percentile latencies over a fixed k-burst and cache *rates*, not wall
+clocks):
+
+  * scalability ``burst_ab``:   batched-arm cold e2e p95 (higher = worse)
+  * scalability ``overlap_ab``: overlap-arm restore-path p95 (higher = worse)
+  * scalability ``policy_ab``:  per-trace WS cache hit rate (lower = worse)
+  * cluster per-arm:            cold p95 (higher = worse) and L1 local hit
+    rate (lower = worse)
+
+Informational deltas are printed for everything else in the baseline.
+Regenerate baselines (after an intentional perf change) with::
+
+    PYTHONPATH=src python -m benchmarks.scalability --quick
+    PYTHONPATH=src python -m benchmarks.cluster --quick
+    python scripts/bench_compare.py --update
+
+Usage: python scripts/bench_compare.py [--threshold 0.25] [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+ARTIFACTS = ("BENCH_scalability.json", "BENCH_cluster.json")
+
+
+def _dig(d: dict, path: str):
+    """Fetch ``a.b.c`` from nested dicts; None when any hop is missing."""
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def _guards(name: str, artifact: dict) -> list[tuple[str, str]]:
+    """(metric path, direction) pairs to guard; direction is ``up`` when an
+    increase is a regression (latency) and ``down`` when a decrease is
+    (hit rate)."""
+    guards: list[tuple[str, str]] = []
+    if name == "BENCH_scalability.json":
+        for k in (artifact.get("burst_ab") or {}):
+            guards.append((f"burst_ab.{k}.batched.cold_e2e_p95_s", "up"))
+        if _dig(artifact, "overlap_ab.overlap.cold_restore_p95_s") is not None:
+            guards.append(("overlap_ab.overlap.cold_restore_p95_s", "up"))
+        for trace in (artifact.get("policy_ab") or {}):
+            for arm in artifact["policy_ab"][trace]:
+                guards.append(
+                    (f"policy_ab.{trace}.{arm}.ws_cache_hit_rate", "down"))
+    elif name == "BENCH_cluster.json":
+        # every per-arm metric block anywhere under placement_ab /
+        # demand_plane (arms nest under trace names in the former)
+        def walk(d, prefix):
+            if not isinstance(d, dict):
+                return
+            if "cold_p95_s" in d:
+                guards.append((f"{prefix}.cold_p95_s", "up"))
+            if "local_hit_rate" in d:
+                guards.append((f"{prefix}.local_hit_rate", "down"))
+            for k, v in d.items():
+                walk(v, f"{prefix}.{k}")
+
+        for section in ("placement_ab", "demand_plane"):
+            walk(artifact.get(section), section)
+    return guards
+
+
+def compare(name: str, threshold: float) -> list[str]:
+    """Returns failure strings for ``name``; empty when within budget."""
+    cur_path = os.path.join(ROOT, name)
+    base_path = os.path.join(BASELINE_DIR, name)
+    if not os.path.exists(cur_path):
+        return [f"{name}: artifact missing (run the quick benchmark first)"]
+    if not os.path.exists(base_path):
+        return [f"{name}: no committed baseline at {base_path}"]
+    with open(cur_path) as f:
+        cur = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+
+    failures = []
+    for path, direction in _guards(name, base):
+        b, c = _dig(base, path), _dig(cur, path)
+        if b is None or c is None:
+            failures.append(f"{name}:{path}: metric missing "
+                            f"(baseline={b}, current={c})")
+            continue
+        if not b:                      # zero baseline carries no signal
+            continue
+        delta = (c - b) / abs(b)
+        regressed = delta > threshold if direction == "up" \
+            else delta < -threshold
+        marker = "FAIL" if regressed else "ok"
+        print(f"  [{marker:4s}] {name}:{path}  "
+              f"baseline={b:.6g} current={c:.6g} delta={delta:+.1%}")
+        if regressed:
+            failures.append(
+                f"{name}:{path} regressed {delta:+.1%} "
+                f"(baseline {b:.6g} -> {c:.6g}, budget ±{threshold:.0%})")
+    return failures
+
+
+def update() -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for name in ARTIFACTS:
+        src = os.path.join(ROOT, name)
+        if not os.path.exists(src):
+            sys.exit(f"cannot update baseline: {src} missing "
+                     f"(run the quick benchmark first)")
+        shutil.copyfile(src, os.path.join(BASELINE_DIR, name))
+        print(f"baseline updated: benchmarks/baselines/{name}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression budget (default 0.25 = 25%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current artifacts over the baselines")
+    args = ap.parse_args(argv)
+    if args.update:
+        update()
+        return 0
+    failures: list[str] = []
+    for name in ARTIFACTS:
+        failures += compare(name, args.threshold)
+    if failures:
+        print("\nbench-compare FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench-compare: all guarded metrics within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

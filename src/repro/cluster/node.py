@@ -18,14 +18,20 @@ outlives the control plane in this simulation).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
+import warnings
 
 from ..configs.base import ModelConfig
-from ..core import ReapConfig
 from ..core.reap import WSCache
-from ..serving import (Orchestrator, PolicyConfig, PrewarmPolicy, Router,
-                       RouterConfig)
+from ..serving import (Orchestrator, PrewarmPolicy, Router, RouterConfig,
+                       ServeConfig)
+
+#: Node-flavoured data-plane defaults (smaller than the single-host
+#: RouterConfig: a fleet host shares the machine with its peers).
+NODE_ROUTER = RouterConfig(max_concurrency=4, max_instances_per_function=4,
+                           queue_depth=256, batch_restore_limit=8)
 
 
 class NodeDownError(RuntimeError):
@@ -33,36 +39,70 @@ class NodeDownError(RuntimeError):
 
 
 class WorkerNode:
-    def __init__(self, node_id: str, store_dir: str, *,
-                 ws_cache: WSCache | None = None,
-                 reap: ReapConfig | None = None, mode: str = "reap",
-                 max_concurrency: int = 4,
-                 max_instances_per_function: int = 4,
-                 queue_depth: int = 256,
-                 batch_restore_limit: int = 8,
-                 keepalive_s: float = 60.0, warm_limit: int = 8,
-                 policy: PolicyConfig | None = None):
-        """``ws_cache``: this node's L1 (usually ``store.attach(node_id)``);
-        ``policy``: when given, an adaptive prewarming loop runs per node.
-        ``batch_restore_limit`` caps the node's group restores: a queue of
-        same-function cold starts restores as one batch whose single L1
-        fetch makes any remote shard fetch happen once per group too.
+    def __init__(self, node_id: str, store_dir: str,
+                 config: ServeConfig | None = None, *,
+                 ws_cache: WSCache | None = None, **legacy):
+        """``config`` (a :class:`~repro.serving.ServeConfig`) is the
+        recommended construction path; its ``router`` field defaults to
+        :data:`NODE_ROUTER` and its ``policy`` field enables the per-node
+        adaptive prewarming loop.  ``ws_cache``: this node's L1 (usually
+        ``store.attach(node_id)``).  The pre-ServeConfig loose kwargs
+        (``reap``, ``mode``, ``max_concurrency``,
+        ``max_instances_per_function``, ``queue_depth``,
+        ``batch_restore_limit``, ``keepalive_s``, ``warm_limit``,
+        ``policy``) keep working as a deprecation shim.
         """
+        if legacy:
+            known = {"reap", "mode", "max_concurrency",
+                     "max_instances_per_function", "queue_depth",
+                     "batch_restore_limit", "keepalive_s", "warm_limit",
+                     "policy"}
+            unknown = set(legacy) - known
+            if unknown:
+                raise TypeError(
+                    f"WorkerNode got unexpected kwargs {sorted(unknown)}")
+            warnings.warn(
+                "WorkerNode(..., reap=..., max_concurrency=..., ...) loose "
+                "kwargs are deprecated; pass a ServeConfig instead",
+                DeprecationWarning, stacklevel=2)
+            config = self._fold_legacy(config, legacy)
+        if config is None:
+            config = ServeConfig(overlap_install=False, router=NODE_ROUTER)
+        if config.router is None:
+            config = dataclasses.replace(config, router=NODE_ROUTER)
         self.node_id = node_id
+        self.config = config
         self.ws_cache = ws_cache
-        self.capacity = max_concurrency
-        self.orch = Orchestrator(store_dir, reap=reap, mode=mode,
-                                 keepalive_s=keepalive_s,
-                                 warm_limit=warm_limit, ws_cache=ws_cache)
-        self.router = Router(self.orch, RouterConfig(
-            max_concurrency=max_concurrency,
-            max_instances_per_function=max_instances_per_function,
-            queue_depth=queue_depth,
-            batch_restore_limit=batch_restore_limit))
-        self.policy = (PrewarmPolicy(self.orch, self.router, policy).start()
-                       if policy is not None else None)
+        self.capacity = config.router.max_concurrency
+        self.orch = Orchestrator(store_dir, config, ws_cache=ws_cache)
+        self.router = Router(self.orch, config.router)
+        self.policy = (PrewarmPolicy(self.orch, self.router,
+                                     config.policy).start()
+                       if config.policy is not None else None)
         self._mu = threading.Lock()
         self.alive = True
+
+    @staticmethod
+    def _fold_legacy(config: ServeConfig | None, legacy: dict) -> ServeConfig:
+        """Fold pre-ServeConfig loose kwargs into a ServeConfig (the shim
+        keeps PR-5 behaviour: overlap off unless the ReapConfig opted in)."""
+        if config is None:
+            config = ServeConfig(overlap_install=False)
+        router = config.router or NODE_ROUTER
+        router = dataclasses.replace(router, **{
+            k: legacy[k] for k in ("max_concurrency",
+                                   "max_instances_per_function",
+                                   "queue_depth", "batch_restore_limit")
+            if k in legacy})
+        fields = {k: legacy[k] for k in ("mode", "keepalive_s", "warm_limit",
+                                         "policy") if k in legacy}
+        r = legacy.get("reap")
+        if r is not None:
+            fields.update(reap=r, overlap_install=r.overlap_install,
+                          hot_prefix_frac=r.hot_prefix_frac,
+                          tail_workers=r.tail_workers,
+                          tail_deadline_s=r.tail_deadline_s)
+        return dataclasses.replace(config, router=router, **fields)
 
     # -- control plane --------------------------------------------------
 
@@ -151,6 +191,8 @@ class WorkerNode:
             "load": self.load() if self.alive else 0,
             "router": self.router.stats(),
         }
+        out["stage_seconds"] = self.orch.stage_seconds()
+        out["tails"] = self.orch.tail_stats()
         if self.ws_cache is not None:
             out["ws_cache"] = self.ws_cache.stats()
         if self.policy is not None:

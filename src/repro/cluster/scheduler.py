@@ -448,6 +448,7 @@ class ClusterRouter:
 
 
 def build_fleet(n_nodes: int, store_dir: str, *,
+                config=None,
                 cfg: ScheduleConfig | None = None,
                 demand: DemandConfig | None = None,
                 replication: int = 1, vnodes: int = 64,
@@ -455,18 +456,27 @@ def build_fleet(n_nodes: int, store_dir: str, *,
                 **node_kw) -> ClusterRouter:
     """Assemble ring + sharded store + N worker nodes into a ClusterRouter.
 
-    ``node_kw`` is forwarded to every :class:`WorkerNode` (concurrency,
-    keepalive, per-node policy, ...).  Nodes share ``store_dir`` as the
-    origin snapshot store.  ``demand`` enables the fleet demand plane
-    (arrivals from every node merged and forecast to the owner shards).
+    ``config`` (a :class:`~repro.serving.ServeConfig`) is the recommended
+    construction path: it configures every node's serving stack and its
+    ``demand``/``transfer`` fields supply the fleet demand plane and shard
+    network model unless overridden by the explicit kwargs.  ``node_kw``
+    is the pre-ServeConfig per-node kwarg form (concurrency, keepalive,
+    per-node policy, ...), kept working via WorkerNode's deprecation shim.
+    Nodes share ``store_dir`` as the origin snapshot store.
     """
     from .shardmap import ConsistentHashRing
     ring = ConsistentHashRing(vnodes=vnodes)
+    if config is not None:
+        demand = demand if demand is not None else config.demand
+        transfer = transfer if transfer is not None else config.transfer
+        reap = config.resolved_reap()
+    else:
+        reap = node_kw.get("reap")
     store = ShardedSnapshotStore(ring, transfer=transfer,
                                  replication=replication,
                                  cache_capacity_bytes=cache_capacity_bytes,
-                                 reap=node_kw.get("reap"))
-    nodes = [WorkerNode(f"node-{i}", store_dir,
+                                 reap=reap)
+    nodes = [WorkerNode(f"node-{i}", store_dir, config,
                         ws_cache=store.attach(f"node-{i}"), **node_kw)
              for i in range(n_nodes)]
     return ClusterRouter(nodes, store=store, cfg=cfg, demand=demand)

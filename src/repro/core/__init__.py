@@ -13,5 +13,5 @@ from .reap import (WS_CACHE, ColdStartReport, Monitor, ReapConfig, WSCache,
                    register_invalidation_listener,
                    unregister_invalidation_listener, write_record)
 from .restore import (STAGES, RestoreBatch, RestorePipeline, StageTimings,
-                      fuse_ws_block)
+                      TailInstall, fuse_ws_block)
 from .snapshot import booted_footprint_bytes, build_instance_snapshot

@@ -151,6 +151,14 @@ class FaultStats:
     n_pages_installed: int = 0
     fault_seconds: float = 0.0
     trace: list[int] = dataclasses.field(default_factory=list)  # page order
+    trace_t: list[float] = dataclasses.field(default_factory=list)  # per-fault time
+    # overlapped-restore accounting: faults that blocked on an in-flight
+    # background (tail) install instead of reading disk, the time they
+    # spent waiting, and tail pages demoted to the disk-fault path by the
+    # straggler deadline
+    tail_waits: int = 0
+    tail_wait_seconds: float = 0.0
+    tail_demoted: int = 0
 
 
 class PageSource:
@@ -216,6 +224,18 @@ class InstanceArena:
         self.stats = FaultStats()
         self.source = PageSource(gm.mem_path, o_direct=o_direct)
         self._lock = threading.RLock()
+        # fault-vs-background-install rendezvous: pages in ``_pending`` have
+        # an in-flight tail install; a fault on one waits on ``_cv`` for the
+        # installer's notify instead of reading disk
+        self._cv = threading.Condition(self._lock)
+        self._pending: set[int] = set()
+        #: liveness backstop for waiters — a tail stuck past this falls
+        #: through to the disk-fault path regardless of the pending marker
+        self.pending_wait_s = 30.0
+        #: §6 recorder gate: only a monitor in record mode keeps the full
+        #: fault trace (bugfix: the trace grew without bound on long
+        #: serving runs).  Raw arenas default to recording.
+        self.record_trace = True
         self._closed = False
 
     # -- fault paths --------------------------------------------------------
@@ -225,12 +245,22 @@ class InstanceArena:
 
         Thread-safe: the residence check, page install, and stats update are
         one atomic step, so concurrent fault paths (e.g. ``make_warm`` racing
-        a monitor) never double-install or corrupt the trace.
+        a monitor) never double-install or corrupt the trace.  A fault on a
+        page with an in-flight background install blocks on the installer's
+        completion (counted in ``tail_waits``/``tail_wait_seconds``, not as
+        a disk fault) instead of falling through to disk.
         """
-        with self._lock:
+        with self._cv:
             missing = [p for p in pages if not self.resident[p]]
             if not missing:
                 return 0
+            if self._pending:
+                waited = self._wait_pending_locked(
+                    [p for p in missing if p in self._pending])
+                if waited:
+                    missing = [p for p in pages if not self.resident[p]]
+                    if not missing:
+                        return 0
             t0 = time.perf_counter()
             if parallel > 1:
                 self._fault_parallel(missing, parallel)
@@ -242,8 +272,79 @@ class InstanceArena:
             self.stats.fault_seconds += time.perf_counter() - t0
             self.stats.n_faults += len(missing)
             self.stats.n_pages_installed += len(missing)
-            self.stats.trace.extend(missing)
+            if self.record_trace:
+                t_now = time.perf_counter()
+                self.stats.trace.extend(missing)
+                self.stats.trace_t.extend([t_now] * len(missing))
+            # pages this fault installed from disk can have no useful
+            # pending marker left (e.g. after a timed-out wait)
+            if self._pending:
+                self._pending.difference_update(missing)
+                self._cv.notify_all()
             return len(missing)
+
+    def _wait_pending_locked(self, pend: list[int]) -> bool:
+        """Wait (``_cv`` held) for in-flight installs covering ``pend``;
+        returns True when any wait actually happened."""
+        if not pend:
+            return False
+        t0 = time.perf_counter()
+        deadline = t0 + self.pending_wait_s
+        while (not self._closed
+               and any(p in self._pending for p in pend)):
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                break
+            self._cv.wait(timeout=left)
+        self.stats.tail_waits += 1
+        self.stats.tail_wait_seconds += time.perf_counter() - t0
+        return True
+
+    # -- background (tail) install rendezvous -------------------------------
+
+    def begin_pending(self, pages: Iterable[int]) -> None:
+        """Mark ``pages`` as having an in-flight background install: a
+        fault on any of them blocks on that install instead of reading
+        disk.  Already-resident pages are skipped."""
+        with self._cv:
+            self._pending.update(
+                int(p) for p in pages if not self.resident[p])
+
+    def install_pending(self, page_indices, block) -> int:
+        """Install one chunk of pending pages (vectorized scatter) and wake
+        fault waiters.  Returns pages actually installed."""
+        with self._cv:
+            n = self.install_block(page_indices, block)
+            self._pending.difference_update(int(p) for p in page_indices)
+            self._cv.notify_all()
+            return n
+
+    def cancel_pending(self, pages: Iterable[int] | None = None, *,
+                       demote: bool = True) -> int:
+        """Drop pending markers (all of them when ``pages`` is None) so
+        waiters fall through to the normal disk-fault path.  ``demote``
+        counts the drop as a straggler demotion (``tail_demoted``) —
+        teardown cancels pass False."""
+        with self._cv:
+            if pages is None:
+                dropped = len(self._pending)
+                self._pending.clear()
+            else:
+                dropped = 0
+                for p in pages:
+                    p = int(p)
+                    if p in self._pending:
+                        self._pending.discard(p)
+                        dropped += 1
+            if dropped and demote:
+                self.stats.tail_demoted += dropped
+            self._cv.notify_all()
+            return dropped
+
+    @property
+    def pending_count(self) -> int:
+        with self._cv:
+            return len(self._pending)
 
     def _fault_parallel(self, pages: list[int], workers: int) -> None:
         import concurrent.futures as cf
@@ -316,10 +417,13 @@ class InstanceArena:
         return int(self.resident.sum()) * PAGE
 
     def close(self):
-        with self._lock:
+        with self._cv:
             if self._closed:
                 return
             self._closed = True
+            # no waiter may hang on a pending marker past close
+            self._pending.clear()
+            self._cv.notify_all()
             self.source.close()
             self.view.release()
             try:

@@ -30,6 +30,7 @@ Files for function ``f`` under ``store_dir``:
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import threading
 import time
@@ -48,14 +49,55 @@ class ReapConfig:
     min_ws_read: int = 8 << 20       # single-read floor noted in §5.2.3 (bytes)
     share_ws_cache: bool = True      # dedupe concurrent WS reads process-wide
     fuse_engine: str = "auto"        # group-install gather: auto|numpy|pallas
+    # -- overlapped restore (serve from a hot prefix, install the tail in
+    # the background).  Off by default so raw pipelines keep the PR-5
+    # fully-resident-at-materialize contract; the serving layer's
+    # ServeConfig flips it on as the recommended construction path.
+    overlap_install: bool = False
+    hot_prefix_frac: float = 0.125   # blind fallback when no cut point exists
+    tail_workers: int = 2            # background tail-install pool size
+    tail_deadline_s: float = 5.0     # straggler demotion to the disk-fault path
+
+
+@dataclasses.dataclass
+class StageTimings:
+    """Per-stage wall-clock seconds of one restore pipeline run.
+
+    ``ws_fetch_s + install_s`` is the paper's "prefetch" segment;
+    ``materialize_s`` (param residency) only runs off-path (prewarms).
+    With overlapped restore, ``install_s`` covers only the eager hot
+    prefix; ``materialize_to_resident_s`` is the overlap window from
+    materialize until the background tail made the arena fully resident,
+    and ``tail_wait_s`` is the time faults spent blocked on the pending
+    tail instead of going to disk.
+    """
+    load_vmm_s: float = 0.0
+    connection_s: float = 0.0
+    ws_fetch_s: float = 0.0
+    install_s: float = 0.0
+    materialize_s: float = 0.0
+    materialize_to_resident_s: float = 0.0
+    tail_wait_s: float = 0.0
+
+    @property
+    def prefetch_s(self) -> float:
+        return self.ws_fetch_s + self.install_s
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
 class ColdStartReport:
+    """Per-invocation latency report, §4.2 split.
+
+    ``stages`` is the source of truth for the restore-stage seconds (the
+    same :class:`StageTimings` the pipeline produced); the historical flat
+    names (``load_vmm_s``, ``connection_s``, ``prefetch_s``, ``install_s``)
+    remain available as read-only compat properties.
+    """
     queue_s: float = 0.0             # router queueing delay (pre-dispatch)
-    load_vmm_s: float = 0.0          # manifest + arena + exec-handle restore
-    connection_s: float = 0.0        # dispatcher (re-)binding
-    prefetch_s: float = 0.0          # WS fetch + eager install (REAP only)
+    stages: StageTimings = dataclasses.field(default_factory=StageTimings)
     processing_s: float = 0.0        # function execution (incl. demand faults)
     fault_s: float = 0.0             # portion of processing spent in faults
     n_faults: int = 0
@@ -63,8 +105,30 @@ class ColdStartReport:
     ws_bytes: int = 0
     ws_cache_hit: bool = False       # WS served from the shared page cache
     prewarmed: bool = False          # served by a pre-spawned warm instance
-    install_s: float = 0.0           # portion of prefetch_s spent installing
     batch_size: int = 1              # instances restored in this one's group
+    tail_waits: int = 0              # faults that blocked on the pending tail
+
+    # -- read-only compat properties over ``stages`` -------------------
+
+    @property
+    def load_vmm_s(self) -> float:
+        return self.stages.load_vmm_s
+
+    @property
+    def connection_s(self) -> float:
+        return self.stages.connection_s
+
+    @property
+    def prefetch_s(self) -> float:
+        return self.stages.prefetch_s
+
+    @property
+    def install_s(self) -> float:
+        return self.stages.install_s
+
+    @property
+    def tail_wait_s(self) -> float:
+        return self.stages.tail_wait_s
 
     @property
     def total_s(self) -> float:
@@ -115,22 +179,76 @@ def ws_path(base: str) -> str:
     return base + ".ws"
 
 
+def cut_path(base: str) -> str:
+    return base + ".cut.json"
+
+
 def has_record(base: str) -> bool:
     return os.path.exists(trace_path(base)) and os.path.exists(ws_path(base))
 
 
-def write_record(base: str, trace: list[int]) -> tuple[int, int]:
+def choose_hot_prefix(times: list[float], *,
+                      lo_frac: float = 0.05, hi_frac: float = 0.9,
+                      min_gap_s: float = 0.005) -> int | None:
+    """Pick the hot-prefix cut point from recorded fault timestamps.
+
+    The recorded trace interleaves two phases: a dense burst of boot/setup
+    faults, then the execution-driven tail.  The cut is the largest
+    inter-fault time gap (the boot→execution knee) searched inside
+    ``[lo_frac, hi_frac]`` of the trace; returns the number of leading
+    trace pages in the hot prefix, or ``None`` when no gap stands out
+    (flat timing, or too few samples).  ``None`` means the timestamps
+    carry no phase signal — callers fall back to the runtime
+    ``hot_prefix_frac`` knob, which deliberately is NOT frozen into the
+    persisted cut file at record time.
+    """
+    n = len(times)
+    if n < 8:
+        return None
+    lo = max(1, int(n * lo_frac))
+    hi = max(lo + 1, int(n * hi_frac))
+    gaps = [(times[i] - times[i - 1], i) for i in range(lo, hi)]
+    if not gaps:
+        return None
+    best_gap, best_i = max(gaps)
+    others = sorted(g for g, _ in gaps)
+    median = others[len(others) // 2]
+    # a knee must dominate the typical inter-fault spacing AND be a real
+    # phase boundary in absolute terms — a scheduler hiccup in a
+    # microsecond-spaced record easily clears a relative-only bar and
+    # would pin a spurious cut
+    if best_gap < max(8 * median, min_gap_s):
+        return None
+    return best_i
+
+
+def read_hot_prefix(base: str) -> int | None:
+    """Recorded hot-prefix page count for ``base``, or None (no cut file)."""
+    try:
+        with open(cut_path(base)) as f:
+            return int(json.loads(f.read())["hot_pages"])
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def write_record(base: str, trace: list[int],
+                 times: list[float] | None = None) -> tuple[int, int]:
     """Copy traced pages into the compact WS file + write the trace file.
 
     Returns (n_pages, ws_bytes).  Duplicates are dropped, order preserved
-    (the order is the fault order -- §5.2.1).
+    (the order is the fault order -- §5.2.1).  When per-fault ``times``
+    accompany the trace, the hot-prefix cut point (overlapped restore) is
+    derived from the boot→execution timing knee and persisted alongside.
     """
     seen: set[int] = set()
     pages: list[int] = []
-    for p in trace:
+    page_times: list[float] = []
+    for i, p in enumerate(trace):
         if p not in seen:
             seen.add(p)
             pages.append(p)
+            if times is not None and i < len(times):
+                page_times.append(times[i])
     arr = np.asarray(pages, dtype=np.int64)
     src = PageSource(base + ".mem", o_direct=False)
     try:
@@ -140,6 +258,15 @@ def write_record(base: str, trace: list[int]) -> tuple[int, int]:
         os.replace(ws_path(base) + ".tmp", ws_path(base))
         np.save(trace_path(base) + ".tmp.npy", arr)
         os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
+        if len(page_times) == len(pages) and pages:
+            cut = choose_hot_prefix(page_times)
+            if cut is not None:
+                with open(cut_path(base) + ".tmp", "w") as f:
+                    f.write(json.dumps({"hot_pages": cut,
+                                        "n_pages": len(pages)}))
+                os.replace(cut_path(base) + ".tmp", cut_path(base))
+            elif os.path.exists(cut_path(base)):
+                os.remove(cut_path(base))  # stale knee from a prior record
         WS_CACHE.invalidate(base)  # a fresh record obsoletes cached WS pages
         _broadcast_invalidation(base)
     finally:
@@ -150,7 +277,7 @@ def write_record(base: str, trace: list[int]) -> tuple[int, int]:
 def drop_record(base: str) -> None:
     WS_CACHE.invalidate(base)
     _broadcast_invalidation(base)
-    for p in (trace_path(base), ws_path(base)):
+    for p in (trace_path(base), ws_path(base), cut_path(base)):
         if os.path.exists(p):
             os.remove(p)
 
@@ -161,6 +288,25 @@ def _read_ws(base: str, cfg: ReapConfig) -> tuple[list[int], bytes]:
     src = PageSource(ws_path(base), o_direct=cfg.o_direct)
     try:
         data = src.read_span(0, len(pages) * PAGE)
+    finally:
+        src.close()
+    return [int(p) for p in pages], data
+
+
+def _read_ws_prefix(base: str, cfg: ReapConfig,
+                    k: int) -> tuple[list[int], bytes]:
+    """Read only the first ``k`` fault-order pages of the WS file.
+
+    The WS file's layout IS the fault order (§5.2.1), so the hot prefix of
+    an overlapped restore is literally the file's head — one short span
+    read instead of the full-file read.  Returns the FULL page-index list
+    (the tail indices are needed for the pending-install markers) with
+    data covering only the prefix."""
+    pages = np.load(trace_path(base))
+    k = min(k, len(pages))
+    src = PageSource(ws_path(base), o_direct=cfg.o_direct)
+    try:
+        data = src.read_span(0, k * PAGE)
     finally:
         src.close()
     return [int(p) for p in pages], data
@@ -308,13 +454,18 @@ class WSCache:
         with self._lock:
             return base in self._entries
 
-    def peek(self, base: str) -> tuple[list[int], bytes] | None:
+    def peek(self, base: str, *,
+             count: bool = True) -> tuple[list[int], bytes] | None:
         """Serve ``base`` from a *completed* entry or return None — never
         joins an in-flight read and never triggers one.  This is the
         cluster shard tier's remote-serve primitive: a peer peeking an
         owner's cache can't block on the owner's single-flight event, so
         cross-node cache waits (and therefore cross-cache deadlock) are
-        impossible by construction.  Freshness is still mtime-checked."""
+        impossible by construction.  Freshness is still mtime-checked.
+
+        ``count=False`` makes the probe stat-silent — the overlapped
+        restore path peeks to decide whether to split its fetch and then
+        fetches anyway on a hit, which would otherwise double-count."""
         try:
             mtime = os.path.getmtime(ws_path(base))
         except OSError:
@@ -323,9 +474,11 @@ class WSCache:
             ent = self._entries.get(base)
             if ent is None or ent[0] != mtime:
                 return None
-            # counted apart from hits/misses: a peek serves a *peer*, and
-            # folding it into hits would inflate this node's local hit rate
-            self.peek_hits += 1
+            if count:
+                # counted apart from hits/misses: a peek serves a *peer*,
+                # and folding it into hits would inflate this node's local
+                # hit rate
+                self.peek_hits += 1
             self._lru_touch(base)
             return ent[1], ent[2]
 
@@ -435,6 +588,18 @@ class Monitor:
         self.prefetch_s = 0.0
         self.ws_cache_hit = False
 
+    @property
+    def mode(self) -> str:
+        return self._mode
+
+    @mode.setter
+    def mode(self, m: str) -> None:
+        # the §6 recorder is the only consumer of the full fault trace —
+        # outside record mode the arena stops accumulating it, so a
+        # long-serving prefetch/vanilla instance can't grow it unboundedly
+        self._mode = m
+        self.arena.record_trace = (m == "record")
+
     def start(self) -> None:
         if self.mode == "prefetch":
             try:
@@ -459,11 +624,15 @@ class Monitor:
             "resident_bytes": self.arena.resident_bytes,
         }
         if self.mode == "record":
-            n, nbytes = write_record(self.base, stats.trace)
+            n, nbytes = write_record(self.base, stats.trace, stats.trace_t)
             out["ws_pages"] = n
             out["ws_bytes"] = nbytes
         elif self.prefetched:
-            residual = stats.n_faults / max(self.prefetched, 1)
+            # disk faults caused by a demoted (straggling) tail install are
+            # prefetch pages the record *did* predict — counting them as
+            # residual mispredictions would trigger §7.2 re-record storms
+            residual = (max(stats.n_faults - stats.tail_demoted, 0)
+                        / max(self.prefetched, 1))
             out["residual_ratio"] = residual
             if residual > self.cfg.rerecord_threshold:
                 drop_record(self.base)  # §7.2 fallback: re-record next time

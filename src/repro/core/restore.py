@@ -28,38 +28,129 @@ byte-for-byte.
 """
 from __future__ import annotations
 
-import dataclasses
+import threading
 import socket
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from .arena import PAGE, GuestMemoryFile
-from .reap import WS_CACHE, Monitor, ReapConfig, _read_ws, trace_path
+from .arena import PAGE, GuestMemoryFile, InstanceArena
+from .reap import (WS_CACHE, Monitor, ReapConfig, StageTimings, _read_ws,
+                   _read_ws_prefix, read_hot_prefix, trace_path)
+
+__all__ = [
+    "STAGES", "StageTimings", "TailInstall", "RestorePipeline",
+    "RestoreBatch", "connect_handshake", "default_fuse_engine",
+    "fuse_ws_block",
+]
 
 #: Stage names in execution order (benchmarks iterate this).
 STAGES = ("load_vmm", "connect", "ws_fetch", "install", "materialize")
 
 
-@dataclasses.dataclass
-class StageTimings:
-    """Per-stage wall-clock seconds of one pipeline run.
+# Shared background pool for tail installs: tails are short memcpy bursts,
+# so one small process-wide pool beats a thread per restore.  Sized by the
+# first ``tail_workers`` seen (later configs reuse the pool).
+_TAIL_POOL: ThreadPoolExecutor | None = None
+_TAIL_POOL_LOCK = threading.Lock()
 
-    ``ws_fetch_s + install_s`` is the paper's "prefetch" segment;
-    ``materialize_s`` (param residency) only runs off-path (prewarms).
+
+def _tail_pool(workers: int) -> ThreadPoolExecutor:
+    global _TAIL_POOL
+    with _TAIL_POOL_LOCK:
+        if _TAIL_POOL is None:
+            _TAIL_POOL = ThreadPoolExecutor(
+                max_workers=max(1, workers),
+                thread_name_prefix="tail-install")
+        return _TAIL_POOL
+
+
+class TailInstall:
+    """Background fetch+install of the working-set tail after materialize.
+
+    The arena's pending markers are set *before* the task is scheduled, so
+    a fault racing the installer always either waits on the pending page or
+    finds it resident — never reads disk for a page the tail holds.  Pages
+    are installed in chunks (each chunk notifies waiters) and a straggler
+    deadline demotes the remaining tail to the normal disk-fault path.
+
+    ``block`` of None defers even the tail's *bytes* to the background:
+    ``fetch()`` (run first, on the worker) returns the tail's page rows —
+    the overlapped pipeline uses this on a WS-cache miss so the eager path
+    reads only the hot-prefix span of the WS file.
     """
-    load_vmm_s: float = 0.0
-    connection_s: float = 0.0
-    ws_fetch_s: float = 0.0
-    install_s: float = 0.0
-    materialize_s: float = 0.0
 
-    @property
-    def prefetch_s(self) -> float:
-        return self.ws_fetch_s + self.install_s
+    CHUNK_PAGES = 256
+    #: test seam: ``throttle(tail, chunk_start)`` runs before each chunk.
+    throttle = None
 
-    def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+    def __init__(self, arena: InstanceArena, pages, block=None, *,
+                 fetch=None, deadline_s: float = 5.0, workers: int = 2):
+        if block is None and fetch is None:
+            raise ValueError("TailInstall needs a block or a fetch")
+        self.arena = arena
+        self.pages = np.asarray(pages, dtype=np.int64)
+        self.block = block
+        self.fetch = fetch
+        self.fetch_s = 0.0
+        self.deadline_s = deadline_s
+        self.demoted = False
+        self.done_at: float | None = None   # perf_counter at full residency
+        self.t0 = time.perf_counter()
+        self._cancel = threading.Event()
+        arena.begin_pending(self.pages)
+        self._future = _tail_pool(workers).submit(self._run)
+
+    def _run(self) -> None:
+        try:
+            if self.block is None:
+                if self._cancel.is_set():
+                    self.arena.cancel_pending(self.pages, demote=False)
+                    return
+                if time.perf_counter() - self.t0 > self.deadline_s:
+                    self.arena.cancel_pending(self.pages, demote=True)
+                    self.demoted = True
+                    return
+                t0 = time.perf_counter()
+                self.block = self.fetch()
+                self.fetch_s = time.perf_counter() - t0
+            n = len(self.pages)
+            for i in range(0, n, self.CHUNK_PAGES):
+                if self._cancel.is_set():
+                    self.arena.cancel_pending(self.pages[i:], demote=False)
+                    return
+                if time.perf_counter() - self.t0 > self.deadline_s:
+                    # straggler: demote the rest to the disk-fault path
+                    self.arena.cancel_pending(self.pages[i:], demote=True)
+                    self.demoted = True
+                    return
+                if TailInstall.throttle is not None:
+                    TailInstall.throttle(self, i)
+                j = i + self.CHUNK_PAGES
+                self.arena.install_pending(self.pages[i:j], self.block[i:j])
+            self.done_at = time.perf_counter()
+        except BaseException:
+            # never leave waiters parked on pages nobody will install
+            self.arena.cancel_pending(self.pages)
+            raise
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def wait(self, timeout: float | None = None) -> None:
+        self._future.result(timeout)
+
+    def cancel(self, join: bool = True) -> None:
+        """Stop installing (remaining pending markers are dropped without
+        counting as demotions); ``join`` waits for the worker to leave the
+        arena so a subsequent ``arena.close()`` is safe."""
+        self._cancel.set()
+        if join:
+            try:
+                self._future.result(timeout=30.0)
+            except BaseException:
+                pass
 
 
 def connect_handshake() -> None:
@@ -154,6 +245,12 @@ class RestorePipeline:
         self.timings = StageTimings()
         self.gm: GuestMemoryFile | None = None
         self.monitor: Monitor | None = None
+        #: live background tail install (overlapped restore), else None.
+        self.tail: TailInstall | None = None
+        #: hot-prefix size when ws_fetch split (read only the prefix span);
+        #: the tail's bytes then come from ``_tail_fetch`` in the background.
+        self._split_k: int | None = None
+        self._tail_fetch = None          # () -> (pages, data) full WS
 
     # -- stages ---------------------------------------------------------
 
@@ -200,20 +297,98 @@ class RestorePipeline:
             if not cfg.use_ws_file:
                 pages = [int(p) for p in np.load(trace_path(self.base))]
                 data, hit = None, False
-            elif cfg.share_ws_cache:
-                pages, data, hit = (self.cache or WS_CACHE).fetch(
-                    self.base, cfg, group=group)
             else:
-                pages, data = _read_ws(self.base, cfg)
-                hit = False
+                split = (self._split_fetch(group)
+                         if cfg.overlap_install else None)
+                if split is not None:
+                    pages, data, hit = split
+                elif cfg.share_ws_cache:
+                    pages, data, hit = (self.cache or WS_CACHE).fetch(
+                        self.base, cfg, group=group)
+                else:
+                    pages, data = _read_ws(self.base, cfg)
+                    hit = False
         except FileNotFoundError:
             mon.mode = "record"          # record dropped under us: re-record
             return None
         self.timings.ws_fetch_s = self.clock() - t0
         return pages, data, hit
 
+    def _split_fetch(self, group: int):
+        """Overlapped fetch: eagerly read only the hot-prefix span of the
+        fault-order WS file; the background tail fetches the full WS (via
+        the single-flight cache when shared, so a group and later restores
+        all ride one read) before installing.  Returns ``(pages,
+        prefix_data, False)`` or None when splitting doesn't apply — a
+        cache hit already holds the full bytes (only the install then
+        overlaps) or the WS is too small to cut."""
+        cfg = self.reap
+        cache = (self.cache or WS_CACHE) if cfg.share_ws_cache else None
+        if cache is not None and cache.peek(self.base, count=False) is not None:
+            return None
+        n = len(np.load(trace_path(self.base)))
+        k = self.hot_count(n)
+        if k >= n:
+            return None
+        pages, data = _read_ws_prefix(self.base, cfg, k)
+        self._split_k = k
+        if cache is not None:
+            self._tail_fetch = lambda: cache.fetch(
+                self.base, cfg, group=group)[:2]
+        else:
+            self._tail_fetch = lambda: _read_ws(self.base, cfg)
+        return pages, data, False
+
+    def _tail_rows(self, k: int, want_pages):
+        """Closure for :class:`TailInstall`: resolve the full WS in the
+        background and slice out the tail's page rows.  A §7.2 re-record
+        can swap the WS under the in-flight fetch — the guard raises and
+        the tail's pending markers drop to the disk-fault path instead of
+        installing rows against the wrong page indices."""
+        fetch = self._tail_fetch
+        want = [int(p) for p in want_pages]
+        base = self.base
+
+        def rows():
+            pages_all, data = fetch()
+            if [int(p) for p in pages_all[k:]] != want:
+                raise RuntimeError(
+                    f"WS for {base} re-recorded during tail fetch")
+            return np.frombuffer(
+                data, dtype=np.uint8,
+                count=len(pages_all) * PAGE).reshape(-1, PAGE)[k:]
+        return rows
+
+    def hot_count(self, n_pages: int) -> int:
+        """Size of the eager hot prefix for an ``n_pages`` working set.
+
+        Without ``overlap_install`` (or for trivially small sets) the whole
+        WS is installed eagerly.  With it, the recorded cut point (the
+        boot→execution timing knee — reap.py) wins over the blind
+        ``hot_prefix_frac`` fallback.
+        """
+        if not self.reap.overlap_install or n_pages <= 8:
+            return n_pages
+        k = read_hot_prefix(self.base)
+        if k is None:
+            k = int(round(n_pages * self.reap.hot_prefix_frac))
+        return max(1, min(k, n_pages))
+
+    def _start_tail(self, pages, block=None, *, fetch=None) -> None:
+        self.tail = TailInstall(
+            self.monitor.arena, pages, block, fetch=fetch,
+            deadline_s=self.reap.tail_deadline_s,
+            workers=self.reap.tail_workers)
+
     def install(self, fetched) -> None:
-        """Single-instance eager install (per-page ``install_span`` path)."""
+        """Single-instance eager install (per-page ``install_span`` path).
+
+        With ``overlap_install`` only the hot prefix (fault-order head of
+        the WS) installs eagerly; the tail is handed to a background
+        :class:`TailInstall` and this pipeline MATERIALIZES before the
+        arena is fully resident — the arena's pending-fault path covers
+        the gap.
+        """
         if fetched is None:
             return
         pages, data, hit = fetched
@@ -222,23 +397,48 @@ class RestorePipeline:
             self.monitor.arena.touch_pages(
                 pages, parallel=max(self.reap.parallel_faults, 1))
         else:
-            self.monitor.arena.install_span(pages, data)
+            k = (self._split_k if self._split_k is not None
+                 else self.hot_count(len(pages)))
+            self.monitor.arena.install_span(
+                pages[:k], memoryview(data)[:k * PAGE])
+            if k < len(pages):
+                self.timings.install_s = self.clock() - t0
+                self._mark_prefetched(len(pages), hit)
+                if self._tail_fetch is not None:
+                    # split fetch: the tail's bytes arrive in the background
+                    self._start_tail(pages[k:],
+                                     fetch=self._tail_rows(k, pages[k:]))
+                else:
+                    tail_block = np.frombuffer(
+                        data, dtype=np.uint8,
+                        count=len(pages) * PAGE).reshape(-1, PAGE)[k:]
+                    self._start_tail(pages[k:], tail_block)
+                return
         self.timings.install_s = self.clock() - t0
         self._mark_prefetched(len(pages), hit)
 
     def install_block(self, sorted_pages: np.ndarray, block: np.ndarray,
-                      hit: bool, *, ws_fetch_s: float = 0.0) -> None:
+                      hit: bool, *, ws_fetch_s: float = 0.0,
+                      tail: tuple[np.ndarray, np.ndarray | None] | None = None,
+                      tail_fetch=None) -> None:
         """Fused group install: one vectorized scatter of the shared block.
 
         ``ws_fetch_s`` charges this instance its share of the group's
         single fetch (every member waited on it, like followers used to
-        wait on the single-flight leader).
+        wait on the single-flight leader).  ``tail`` — the (pages, block)
+        remainder of an overlapped restore — starts a background
+        :class:`TailInstall` after the eager prefix lands; a tail block of
+        None defers the tail's bytes to ``tail_fetch`` (split fetch).
         """
         t0 = self.clock()
         self.monitor.arena.install_block(sorted_pages, block)
         self.timings.install_s = self.clock() - t0
         self.timings.ws_fetch_s = ws_fetch_s
-        self._mark_prefetched(len(sorted_pages), hit)
+        n_total = len(sorted_pages)
+        if tail is not None and len(tail[0]):
+            n_total += len(tail[0])
+            self._start_tail(tail[0], tail[1], fetch=tail_fetch)
+        self._mark_prefetched(n_total, hit)
 
     def materialize(self, fn) -> None:
         """Timed post-install residency work (e.g. param materialization)."""
@@ -265,6 +465,11 @@ class RestorePipeline:
 
     def close(self) -> None:
         """Tear down a partially-restored pipeline (error paths)."""
+        if self.tail is not None:
+            # the tail worker writes into the arena mmap; join it before
+            # the close releases the buffer under it
+            self.tail.cancel(join=True)
+            self.tail = None
         if self.monitor is not None:
             self.monitor.arena.close()
 
@@ -319,14 +524,49 @@ class RestoreBatch:
                     p.install(fetched)
                 return self
             t0 = leader.clock()
+            if leader._split_k is not None:
+                # the leader's fetch split: ``data`` holds only the hot
+                # prefix span.  Fuse just the prefix; every member's tail
+                # resolves the full WS in the background (the per-pipe
+                # fetch closures collapse to one read via the single-flight
+                # cache, the rest hit the fresh entry)
+                k = leader._split_k
+                sorted_hot, hot_block = fuse_ws_block(
+                    pages[:k], data, engine=leader.reap.fuse_engine)
+                self.fuse_s = leader.clock() - t0
+                fetch_s = leader.timings.ws_fetch_s + self.fuse_s
+                tail_pages = np.asarray(pages[k:], dtype=np.int64)
+                for p in pipes:
+                    p.install_block(
+                        sorted_hot, hot_block, hit, ws_fetch_s=fetch_s,
+                        tail=(tail_pages, None),
+                        tail_fetch=leader._tail_rows(k, tail_pages))
+                return self
             sorted_pages, block = fuse_ws_block(
                 pages, data, engine=leader.reap.fuse_engine)
             self.fuse_s = leader.clock() - t0
             # the fuse pass and the fetch sit on every member's critical
             # path — charge them to each report like follower waits were
             fetch_s = leader.timings.ws_fetch_s + self.fuse_s
-            for p in pipes:
-                p.install_block(sorted_pages, block, hit, ws_fetch_s=fetch_s)
+            k_hot = leader.hot_count(len(pages))
+            if k_hot < len(pages):
+                # overlapped group restore: the hot set is the fault-order
+                # head of the trace; split the ascending fused block by
+                # membership so each member eagerly scatters only the
+                # prefix and backgrounds the rest
+                hot = set(int(p) for p in pages[:k_hot])
+                mask = np.fromiter((int(p) in hot for p in sorted_pages),
+                                   dtype=bool, count=len(sorted_pages))
+                hot_pages, hot_block = sorted_pages[mask], block[mask]
+                tail_pages, tail_block = sorted_pages[~mask], block[~mask]
+                for p in pipes:
+                    p.install_block(hot_pages, hot_block, hit,
+                                    ws_fetch_s=fetch_s,
+                                    tail=(tail_pages, tail_block))
+            else:
+                for p in pipes:
+                    p.install_block(sorted_pages, block, hit,
+                                    ws_fetch_s=fetch_s)
             return self
         except BaseException:
             for p in pipes:
@@ -335,8 +575,7 @@ class RestoreBatch:
 
     def stage_seconds(self) -> dict:
         """Aggregate per-stage seconds across the group (+ the fuse pass)."""
-        out = {k: 0.0 for k in ("load_vmm_s", "connection_s", "ws_fetch_s",
-                                "install_s", "materialize_s")}
+        out = {k: 0.0 for k in StageTimings().as_dict()}
         for p in self.pipes:
             for k, v in p.timings.as_dict().items():
                 out[k] += v

@@ -1,3 +1,4 @@
+from .config import ServeConfig
 from .forecast import ForecastConfig, ForecastDemand, PeriodicityDetector
 from .instance import (ExecutableCache, FunctionInstance, State,
                        restore_group)

@@ -1,0 +1,64 @@
+"""ServeConfig: the one composed entrypoint for the serving stack.
+
+The knobs used to be scattered — ``ReapConfig`` on the orchestrator,
+``RouterConfig.batch_restore_limit`` on the router, ``PolicyConfig`` /
+``forecast_cfg`` on the policy loop, ``DemandConfig`` and per-node
+``TransferModel`` args on the cluster layer.  :class:`ServeConfig` composes
+them behind a single dataclass consumed by
+:class:`~repro.serving.Orchestrator`, :class:`~repro.cluster.WorkerNode`
+and :func:`~repro.cluster.build_fleet`; the overlapped-restore knobs
+(``overlap_install``, ``hot_prefix_frac``, ``tail_workers``,
+``tail_deadline_s``) live here first and are folded into the effective
+:class:`~repro.core.ReapConfig` by :meth:`ServeConfig.resolved_reap`.
+
+The old loose-kwarg constructors keep working through deprecation shims.
+Note the default flips ``overlap_install`` ON: constructing through
+ServeConfig opts into serving from the hot prefix while the working-set
+tail installs in the background (a MATERIALIZED instance is then *not*
+necessarily fully resident — the arena's pending-fault path covers the
+gap).  Legacy constructors keep the old fully-resident behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from ..core import ReapConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    # -- restore / REAP -------------------------------------------------
+    reap: ReapConfig = dataclasses.field(default_factory=ReapConfig)
+    mode: str = "reap"               # 'reap' | 'vanilla'
+    # -- overlapped restore (authoritative here; folded into ``reap``) --
+    overlap_install: bool = True
+    hot_prefix_frac: float = 0.125
+    tail_workers: int = 2
+    tail_deadline_s: float = 5.0
+    # -- instance pools -------------------------------------------------
+    keepalive_s: float = 60.0
+    warm_limit: int = 8
+    prewarm_concurrency: int = 4
+    # -- data plane (None => RouterConfig()'s defaults) ----------------
+    # typed Any to keep this module import-cycle-free (router.py imports
+    # orchestrator.py which imports this module)
+    router: Optional[Any] = None     # serving.RouterConfig
+    # -- optional control/cluster planes -------------------------------
+    policy: Optional[Any] = None     # serving.PolicyConfig (prewarm loop)
+    demand: Optional[Any] = None     # cluster.DemandConfig (fleet forecasts)
+    transfer: Optional[Any] = None   # cluster.TransferModel (shard network)
+
+    def resolved_reap(self) -> ReapConfig:
+        """The effective ReapConfig: ``reap`` with the overlap knobs
+        (authoritative on this config) folded in."""
+        return dataclasses.replace(
+            self.reap,
+            overlap_install=self.overlap_install,
+            hot_prefix_frac=self.hot_prefix_frac,
+            tail_workers=self.tail_workers,
+            tail_deadline_s=self.tail_deadline_s)
+
+    def router_config(self):
+        from .router import RouterConfig
+        return self.router if self.router is not None else RouterConfig()

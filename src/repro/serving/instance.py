@@ -33,7 +33,7 @@ import time
 
 from ..configs.base import ModelConfig
 from ..core import ReapConfig, run_invocation
-from ..core.reap import ColdStartReport
+from ..core.reap import ColdStartReport, StageTimings
 from ..core.restore import RestoreBatch, RestorePipeline
 from ..models import get_family
 from ..nn import spec as nnspec
@@ -103,6 +103,10 @@ class FunctionInstance:
         self.monitor = None
         self._warm_params = None
         self._n_invocations = 0
+        #: live background tail install (overlapped restore), else None —
+        #: a MATERIALIZED instance with a live tail is NOT fully resident;
+        #: faults on tail pages wait on the install (arena.py)
+        self._tail = None
 
     # -- restore (thin shell over core/restore.py) ---------------------
 
@@ -117,13 +121,10 @@ class FunctionInstance:
         timings onto the §4.2 report split."""
         self.gm = pipe.gm
         self.monitor = pipe.monitor
-        t = pipe.timings
+        self._tail = pipe.tail
         self.report = dataclasses.replace(
             self.report,
-            load_vmm_s=t.load_vmm_s,
-            connection_s=t.connection_s,
-            prefetch_s=t.prefetch_s,       # = ws_fetch_s + install_s
-            install_s=t.install_s,
+            stages=dataclasses.replace(pipe.timings),
             n_prefetched_pages=pipe.monitor.prefetched,
             ws_cache_hit=pipe.monitor.ws_cache_hit,
             prewarmed=self.prewarmed,
@@ -154,14 +155,24 @@ class FunctionInstance:
             self.last_used = time.monotonic()
 
     def try_reclaim(self) -> bool:
-        """IDLE -> RECLAIMED; never tears down a BUSY instance."""
+        """IDLE -> RECLAIMED; never tears down a BUSY instance, and never
+        one whose background tail is still installing (the tail worker
+        writes into the arena mmap — a keepalive sweep must not close it
+        under the worker; forced paths use :meth:`cancel_tail` first)."""
         with self._state_lock:
             if self.state is not State.IDLE:
+                return False
+            if self._tail is not None and not self._tail.done():
                 return False
             self.state = State.RECLAIMED
         self.monitor.arena.close()
         self._warm_params = None
         return True
+
+    def cancel_tail(self, join: bool = True) -> None:
+        """Stop a live background tail install (no-op without one)."""
+        if self._tail is not None:
+            self._tail.cancel(join=join)
 
     # ------------------------------------------------------------------
 
@@ -169,6 +180,7 @@ class FunctionInstance:
         """Process one invocation; first call is cold, later calls warm."""
         stats = self.monitor.arena.stats
         f0, fs0 = stats.n_faults, stats.fault_seconds
+        tw0, tws0 = stats.tail_waits, stats.tail_wait_seconds
         t0 = time.perf_counter()
         if self._warm_params is not None:
             logits = ExecutableCache.get(self.cfg)(self._warm_params, batch)
@@ -184,18 +196,35 @@ class FunctionInstance:
         # the first (cold) invocation only — and never to an invocation on a
         # prewarmed instance, whose restore ran off the critical path
         on_path = first and not self.prewarmed
+        prev = self.report.stages
+        tail = self._tail
+        stages = StageTimings(
+            load_vmm_s=prev.load_vmm_s if on_path else 0.0,
+            connection_s=prev.connection_s if on_path else 0.0,
+            ws_fetch_s=prev.ws_fetch_s if on_path else 0.0,
+            install_s=prev.install_s if on_path else 0.0,
+            materialize_s=prev.materialize_s if on_path else 0.0,
+            # overlap window: restore-return → fully resident (known only
+            # once the background tail finished; 0.0 while still live)
+            materialize_to_resident_s=(
+                tail.done_at - tail.t0
+                if on_path and tail is not None and tail.done_at is not None
+                else 0.0),
+            # tail-wait time is attributed to whichever invocation's faults
+            # actually blocked on the pending install — including warm
+            # invocations racing a still-live tail
+            tail_wait_s=stats.tail_wait_seconds - tws0,
+        )
         self.report = dataclasses.replace(
             self.report,
-            load_vmm_s=self.report.load_vmm_s if on_path else 0.0,
-            connection_s=self.report.connection_s if on_path else 0.0,
-            prefetch_s=self.report.prefetch_s if on_path else 0.0,
-            install_s=self.report.install_s if on_path else 0.0,
+            stages=stages,
             n_prefetched_pages=self.report.n_prefetched_pages if on_path else 0,
             ws_cache_hit=self.report.ws_cache_hit if on_path else False,
             prewarmed=self.prewarmed,
             processing_s=dt,
             fault_s=stats.fault_seconds - fs0,
             n_faults=stats.n_faults - f0,
+            tail_waits=stats.tail_waits - tw0,
         )
         self.last_used = time.monotonic()
         return logits, dt
@@ -223,9 +252,12 @@ class FunctionInstance:
 
     def reclaim(self):
         """Unconditional teardown (caller must know the instance is not
-        mid-invocation); prefer :meth:`try_reclaim` on shared paths."""
+        mid-invocation); prefer :meth:`try_reclaim` on shared paths.  A
+        live background tail is cancelled and joined first so the arena
+        never closes under the tail worker's writes."""
         with self._state_lock:
             self.state = State.RECLAIMED
+        self.cancel_tail(join=True)
         if self.monitor is not None:
             self.monitor.arena.close()
         self._warm_params = None

@@ -23,15 +23,19 @@ invocation can never pull the arena out from under it.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
 import time
+import warnings
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
 from ..configs.base import ModelConfig
 from ..core import ReapConfig, build_instance_snapshot
-from ..core.reap import ColdStartReport, drop_record
+from ..core.reap import ColdStartReport, StageTimings, drop_record
+from .config import ServeConfig
 from .instance import FunctionInstance, restore_group
 
 
@@ -74,26 +78,60 @@ class FunctionRecord:
 
 
 class Orchestrator:
-    def __init__(self, store_dir: str, *, reap: ReapConfig | None = None,
-                 mode: str = "reap", keepalive_s: float = 60.0,
-                 warm_limit: int = 8, prewarm_concurrency: int = 4,
-                 ws_cache=None):
-        """mode: 'reap' (record+prefetch) | 'vanilla' (baseline snapshots).
+    def __init__(self, store_dir: str, config: ServeConfig | None = None, *,
+                 reap: ReapConfig | None = None, mode: str | None = None,
+                 keepalive_s: float | None = None, warm_limit: int | None = None,
+                 prewarm_concurrency: int | None = None, ws_cache=None):
+        """``config`` (a :class:`~repro.serving.ServeConfig`) is the
+        recommended construction path; it also enables overlapped restore
+        by default.  The loose keyword knobs (``reap``, ``mode``,
+        ``keepalive_s``, ``warm_limit``, ``prewarm_concurrency``) are the
+        pre-ServeConfig API, kept working as a deprecation shim — they
+        override the matching ``config`` field and keep the legacy
+        fully-resident restore behaviour when no config is given.
         ``ws_cache``: WS page cache every instance prefetches through (None
         => process-wide default; a cluster WorkerNode passes its own
         two-tier cache so restores resolve local-hit / remote-fetch /
         origin-disk)."""
+        legacy = {"reap": reap, "mode": mode, "keepalive_s": keepalive_s,
+                  "warm_limit": warm_limit,
+                  "prewarm_concurrency": prewarm_concurrency}
+        legacy = {k: v for k, v in legacy.items() if v is not None}
+        if config is None:
+            # legacy construction keeps PR-5 behaviour: overlap off unless
+            # the passed ReapConfig itself opted in
+            config = ServeConfig(overlap_install=False)
+        if legacy:
+            warnings.warn(
+                "Orchestrator(store_dir, reap=..., mode=..., ...) keyword "
+                "knobs are deprecated; pass a ServeConfig instead",
+                DeprecationWarning, stacklevel=2)
+            r = legacy.pop("reap", None)
+            if r is not None:
+                # the loose ReapConfig is authoritative, overlap knobs
+                # included (it predates their ServeConfig home)
+                config = dataclasses.replace(
+                    config, reap=r,
+                    overlap_install=r.overlap_install,
+                    hot_prefix_frac=r.hot_prefix_frac,
+                    tail_workers=r.tail_workers,
+                    tail_deadline_s=r.tail_deadline_s)
+            config = dataclasses.replace(config, **legacy)
+        self.config = config
         self.store_dir = store_dir
-        self.reap = reap or ReapConfig()
-        self.mode = mode
+        self.reap = config.resolved_reap()
+        self.mode = config.mode
         self.ws_cache = ws_cache
-        self.keepalive_s = keepalive_s
-        self.warm_limit = warm_limit
-        self.prewarm_concurrency = prewarm_concurrency
+        self.keepalive_s = config.keepalive_s
+        self.warm_limit = config.warm_limit
+        self.prewarm_concurrency = config.prewarm_concurrency
         self.functions: dict[str, FunctionRecord] = {}
         self._lock = threading.Lock()
         self._prewarm_pool: ThreadPoolExecutor | None = None
         self._prewarm_futures: list[Future] = []
+        # live background tail installs spawned by this orchestrator's
+        # group restores (bounded; drained by tail_quiesce / tail_stats)
+        self._tails: deque = deque(maxlen=512)
         self._closed = False
         os.makedirs(store_dir, exist_ok=True)
 
@@ -128,11 +166,24 @@ class Orchestrator:
     def reset_records(self, name: str) -> None:
         drop_record(self.functions[name].base)
 
+    @staticmethod
+    def _force_reclaim(inst: FunctionInstance) -> bool:
+        """Reclaim an instance that may carry a live tail install: cancel
+        the tail (join) first, then reclaim.  Returns False only when the
+        instance is BUSY."""
+        if inst.try_reclaim():
+            return True
+        inst.cancel_tail(join=True)
+        return inst.try_reclaim()
+
     def scale_to_zero(self, name: str) -> None:
+        """Reclaim every idle/fresh instance of ``name``.  Unlike the
+        keepalive reaper this is a *forced* path: live background tail
+        installs are cancelled (and joined) so the arenas actually close."""
         rec = self.functions[name]
         with rec.lock:
-            rec.idle = [i for i in rec.idle if not i.try_reclaim()]
-            rec.fresh = [i for i in rec.fresh if not i.try_reclaim()]
+            rec.idle = [i for i in rec.idle if not self._force_reclaim(i)]
+            rec.fresh = [i for i in rec.fresh if not self._force_reclaim(i)]
 
     def set_policy(self, name: str, *, warm_limit: int | None = None,
                    keepalive_s: float | None = None,
@@ -235,7 +286,7 @@ class Orchestrator:
                     else:
                         leftover.append(inst)  # limit shrank mid-spawn
             for inst in leftover:
-                inst.try_reclaim()
+                self._force_reclaim(inst)
         except BaseException as e:
             # a failed prewarm (e.g. records dropped mid-spawn) must neither
             # leak half-built instances nor detonate later out of a Future
@@ -248,6 +299,60 @@ class Orchestrator:
         finally:
             with rec.lock:
                 rec.n_prewarming -= n
+
+    def tail_quiesce(self, timeout: float | None = None) -> int:
+        """Block until every tracked background tail install has finished
+        (installed, demoted, or cancelled); returns how many were waited
+        on.  ``timeout`` bounds the total wait."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            tails = list(self._tails)
+        n = 0
+        for t in tails:
+            left = None if deadline is None else max(
+                deadline - time.monotonic(), 0.001)
+            try:
+                t.wait(left)
+            except BaseException:
+                pass
+            n += 1
+        return n
+
+    def tail_stats(self) -> dict:
+        """Counters over tracked background tail installs + per-arena
+        fault-wait totals (live = still installing)."""
+        with self._lock:
+            tails = list(self._tails)
+        out = {"tracked": len(tails),
+               "live": sum(1 for t in tails if not t.done()),
+               "demoted": sum(1 for t in tails if t.demoted)}
+        waits = wait_s = 0
+        with self._lock:
+            records = list(self.functions.values())
+        for rec in records:
+            with rec.lock:
+                for r in rec.stats:
+                    waits += r.tail_waits
+                    wait_s += r.stages.tail_wait_s
+        out["tail_waits"] = waits
+        out["tail_wait_seconds"] = wait_s
+        return out
+
+    def stage_seconds(self) -> dict:
+        """Mean per-stage seconds across every recorded invocation report
+        (the same ``stage_seconds`` schema Router.summarize emits)."""
+        totals = {k: 0.0 for k in StageTimings().as_dict()}
+        n = 0
+        with self._lock:
+            records = list(self.functions.values())
+        for rec in records:
+            with rec.lock:
+                reports = list(rec.stats)
+            for r in reports:
+                n += 1
+                for k, v in r.stages.as_dict().items():
+                    totals[k] += v
+        return {k: v / max(n, 1) for k, v in totals.items()}
 
     def reap_idle(self) -> int:
         """Keepalive sweep: reclaim instances idle past the deadline.
@@ -322,6 +427,10 @@ class Orchestrator:
                                   ws_cache=self.ws_cache)
                  for _ in range(n)]
         restore_group(insts, materialize=materialize)
+        tails = [i._tail for i in insts if i._tail is not None]
+        if tails:
+            with self._lock:
+                self._tails.extend(tails)
         with rec.lock:
             rec.n_spawned += n
             if n > 1:
@@ -397,7 +506,7 @@ class Orchestrator:
             if not self._closed and len(rec.idle) < self._effective_warm_limit(rec):
                 rec.idle.append(inst)
                 return
-        inst.try_reclaim()
+        self._force_reclaim(inst)
 
     def invoke(self, name: str, batch: dict, *, force_cold: bool = False,
                group_hint: int = 1) -> tuple[Any, ColdStartReport]:
@@ -417,9 +526,9 @@ class Orchestrator:
                 inst.make_warm()  # stays memory-resident until reclaimed
         except BaseException:
             # failed invocation: never return the instance to the warm pool,
-            # and never leak its arena mmap
+            # and never leak its arena mmap (a live tail is cancelled first)
             inst.release()
-            inst.try_reclaim()
+            self._force_reclaim(inst)
             raise
         report = inst.report
         self._release_instance(rec, inst, report)

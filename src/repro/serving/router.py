@@ -305,25 +305,40 @@ def percentile(xs: list[float], q: float) -> float:
 
 
 def summarize(reports: list[ColdStartReport]) -> dict:
-    """Latency summary of a batch of per-invocation reports."""
+    """Latency summary of a batch of per-invocation reports.
+
+    ``stage_seconds`` is the canonical mean per-stage schema
+    (:class:`~repro.core.reap.StageTimings` keys) — the same dict shape
+    ``WorkerNode.stats`` and the benchmark artifacts emit, with the
+    overlapped-restore tail-wait time attributed separately.
+    """
+    from ..core.reap import StageTimings
+    n = max(len(reports), 1)
     e2e = [r.e2e_s for r in reports]
     # an invocation is "cold" when restore cost landed on its critical path
     cold = sum(1 for r in reports if r.load_vmm_s > 0)
+    stage = {k: 0.0 for k in StageTimings().as_dict()}
+    for r in reports:
+        for k, v in r.stages.as_dict().items():
+            stage[k] += v
     return {
         "n": len(reports),
-        "queue_mean_s": sum(r.queue_s for r in reports) / max(len(reports), 1),
+        "queue_mean_s": sum(r.queue_s for r in reports) / n,
         "queue_p95_s": percentile([r.queue_s for r in reports], 95),
-        "total_mean_s": sum(r.total_s for r in reports) / max(len(reports), 1),
+        "total_mean_s": sum(r.total_s for r in reports) / n,
         "e2e_p50_s": percentile(e2e, 50),
         "e2e_p95_s": percentile(e2e, 95),
         "ws_cache_hits": sum(1 for r in reports if r.ws_cache_hit),
         "cold": cold,
-        "cold_fraction": cold / max(len(reports), 1),
+        "cold_fraction": cold / n,
         "prewarmed": sum(1 for r in reports if r.prewarmed),
         # group-restore attribution (restore.py): invocations whose cold
         # instance was restored in a batch, and the install-stage cost
         "batched": sum(1 for r in reports
                        if r.load_vmm_s > 0 and r.batch_size > 1),
-        "install_mean_s": (sum(r.install_s for r in reports)
-                          / max(len(reports), 1)),
+        "install_mean_s": sum(r.install_s for r in reports) / n,
+        "stage_seconds": {k: v / n for k, v in stage.items()},
+        # overlapped restore: faults that blocked on a background tail
+        "tail_waits": sum(r.tail_waits for r in reports),
+        "tail_wait_mean_s": stage["tail_wait_s"] / n,
     }

@@ -1,0 +1,444 @@
+"""Overlapped restore (hot prefix + background tail install) + ServeConfig.
+
+Covers: byte parity of fault-during-tail-install races against the
+unoverlapped path (both fuse engines), fault-waits counted apart from disk
+faults, the straggler-deadline demotion to the disk-fault path (and its
+§7.2 residual-ratio exemption), reaper/close safety around live tails, the
+ServeConfig deprecation shims, the stages-based ColdStartReport, the
+serving-mode trace cap, and the recorded hot-prefix cut point.
+"""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ReapConfig
+from repro.core import reap as reap_mod
+from repro.core.arena import ArenaLayout, GuestMemoryFile, InstanceArena
+from repro.core.reap import ColdStartReport, StageTimings
+from repro.core.restore import RestoreBatch, RestorePipeline, TailInstall
+
+OVERLAP = ReapConfig(overlap_install=True, hot_prefix_frac=0.25,
+                     tail_workers=2, tail_deadline_s=30.0)
+
+
+@pytest.fixture()
+def recorded(tmp_path):
+    """A recorded guest-memory file whose WS is big enough to overlap."""
+    tensors = [
+        ("infra/tab", (3000,), "uint8", "infra"),
+        ("params/w", (256, 256), "float32", "serve"),
+        ("boot/opt", (64, 33), "float32", "boot"),
+    ]
+    layout = ArenaLayout.build(tensors)
+    rng = np.random.default_rng(7)
+    arrays = {
+        "infra/tab": np.arange(3000, dtype=np.uint8),
+        "params/w": rng.standard_normal((256, 256)).astype(np.float32),
+        "boot/opt": np.ones((64, 33), np.float32),
+    }
+    gm = GuestMemoryFile.create(str(tmp_path / "fn"), layout, arrays)
+    arena = InstanceArena(gm)
+    arena.tensor("infra/tab")
+    arena.tensor("params/w")
+    reap_mod.write_record(gm.base, arena.stats.trace)
+    arena.close()
+    return gm
+
+
+@pytest.fixture()
+def slow_tail():
+    """Shrink tail chunks and stall between them so tests can race faults
+    against a live tail deterministically; restores the seam afterwards."""
+    chunk0, throttle0 = TailInstall.CHUNK_PAGES, TailInstall.throttle
+    TailInstall.CHUNK_PAGES = 8
+
+    def set_throttle(fn):
+        TailInstall.throttle = staticmethod(fn)
+
+    yield set_throttle
+    TailInstall.CHUNK_PAGES = chunk0
+    TailInstall.throttle = throttle0
+
+
+def _restore(gm, reap, **kw):
+    pipe = RestorePipeline(gm.base, reap, **kw)
+    pipe.run()
+    return pipe
+
+
+# -- byte parity under fault-during-tail-install races ------------------
+
+
+@pytest.mark.parametrize("engine", ["numpy", "pallas"])
+def test_group_overlap_parity_with_fault_race(recorded, slow_tail, engine):
+    """Two group-restored overlapping arenas, faulted mid-tail-install,
+    end up byte-identical to an unoverlapped restore — for both fuse
+    engines."""
+    gm = recorded
+    slow_tail(lambda tail, i: time.sleep(0.02))
+    reap = dataclasses.replace(OVERLAP, fuse_engine=engine)
+    ref = _restore(gm, ReapConfig(fuse_engine=engine))
+    assert ref.tail is None                     # unoverlapped: no tail
+
+    pipes = [RestorePipeline(gm.base, reap) for _ in range(2)]
+    RestoreBatch(pipes).run()
+    ws_pages = [int(p) for p in np.load(reap_mod.trace_path(gm.base))]
+    try:
+        for p in pipes:
+            assert p.tail is not None           # restore really overlapped
+        # fault the *whole* WS on both arenas while their tails are still
+        # installing: tail pages must block on the pending install, then
+        # read installed bytes — never stale zeros
+        threads = [threading.Thread(
+            target=p.monitor.arena.touch_pages, args=(ws_pages,))
+            for p in pipes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for p in pipes:
+            p.tail.wait(30)
+            assert bytes(p.monitor.arena.view) == bytes(ref.monitor.arena.view)
+            st = p.monitor.arena.stats
+            assert st.tail_waits >= 1
+            assert st.tail_wait_seconds > 0.0
+    finally:
+        for p in pipes:
+            p.close()
+        ref.close()
+
+
+def test_single_overlap_parity_and_wait_not_a_fault(recorded, slow_tail):
+    """Single-pipeline overlap: a fault on a pending tail page waits for
+    the installer and is NOT counted as a disk fault (else §7.2 would
+    re-record a perfectly good WS)."""
+    gm = recorded
+    slow_tail(lambda tail, i: time.sleep(0.002))
+    ref = _restore(gm, ReapConfig())
+    pipe = _restore(gm, OVERLAP)
+    try:
+        arena = pipe.monitor.arena
+        assert pipe.tail is not None
+        assert arena.pending_count > 0
+        tail_page = int(pipe.tail.pages[-1])
+        f0 = arena.stats.n_faults
+        arena.touch_pages([tail_page])
+        assert bool(arena.resident[tail_page])
+        assert arena.stats.tail_waits == 1
+        assert arena.stats.n_faults == f0       # waited, did not disk-fault
+        pipe.tail.wait(30)
+        assert bytes(arena.view) == bytes(ref.monitor.arena.view)
+        assert pipe.tail.done_at is not None    # time-to-fully-resident known
+    finally:
+        pipe.close()
+        ref.close()
+
+
+def test_straggler_deadline_demotes_to_disk_faults(recorded, slow_tail):
+    """A stuck tail is demoted at the deadline: pending markers drop, the
+    fault path serves the pages from disk byte-correctly, and the §7.2
+    residual ratio exempts the demoted faults (no re-record storm)."""
+    gm = recorded
+    slow_tail(lambda tail, i: time.sleep(0.05))
+    reap = dataclasses.replace(OVERLAP, tail_deadline_s=0.0)
+    ref = _restore(gm, ReapConfig())
+    pipe = _restore(gm, reap)
+    try:
+        arena = pipe.monitor.arena
+        pipe.tail.wait(30)
+        assert pipe.tail.demoted
+        assert arena.stats.tail_demoted > 0
+        assert arena.pending_count == 0
+        # every demoted page now serves via the normal disk-fault path
+        ws_pages = [int(p) for p in np.load(reap_mod.trace_path(gm.base))]
+        arena.touch_pages(ws_pages)
+        assert bytes(arena.view) == bytes(ref.monitor.arena.view)
+        assert arena.stats.n_faults >= arena.stats.tail_demoted
+        out = pipe.monitor.finish()
+        assert out["residual_ratio"] <= pipe.reap.rerecord_threshold
+        assert "rerecord" not in out            # demotion must not re-record
+        assert reap_mod.has_record(gm.base)
+    finally:
+        pipe.close()
+        ref.close()
+
+
+def test_split_fetch_on_cache_miss(recorded, slow_tail):
+    """On a WS-cache miss the overlapped pipeline reads only the
+    hot-prefix span eagerly; the background tail fetches the full WS
+    (populating the shared cache) and installs it — byte-identical."""
+    from repro.core.reap import WS_CACHE
+    gm = recorded
+    ref = _restore(gm, ReapConfig())
+    WS_CACHE.clear()
+    WS_CACHE.reset_stats()
+    slow_tail(lambda tail, i: time.sleep(0.002))
+    pipe = _restore(gm, OVERLAP)
+    try:
+        assert pipe._split_k is not None        # fetch really split
+        assert pipe.tail is not None and pipe.tail.block is None
+        pipe.tail.wait(30)
+        assert pipe.tail.fetch_s > 0.0          # tail resolved the bytes
+        assert WS_CACHE.stats()["reads"] == 1   # ...through the cache
+        assert bytes(pipe.monitor.arena.view) == bytes(ref.monitor.arena.view)
+        # the eager critical path never paid the full-file read: a second
+        # (unoverlapped) restore now hits the tail-populated entry
+        again = _restore(gm, ReapConfig())
+        assert again.monitor.ws_cache_hit
+        again.close()
+    finally:
+        pipe.close()
+        ref.close()
+
+
+def test_split_fetch_group_shares_one_read(recorded, slow_tail):
+    """A group restore with a split fetch: one prefix span read on the
+    critical path, ONE full-WS read shared by every member's tail."""
+    from repro.core.reap import WS_CACHE
+    gm = recorded
+    ref = _restore(gm, ReapConfig())
+    WS_CACHE.clear()
+    WS_CACHE.reset_stats()
+    slow_tail(lambda tail, i: time.sleep(0.002))
+    pipes = [RestorePipeline(gm.base, OVERLAP) for _ in range(3)]
+    RestoreBatch(pipes).run()
+    try:
+        assert pipes[0]._split_k is not None
+        for p in pipes:
+            assert p.tail is not None
+            p.tail.wait(30)
+            assert bytes(p.monitor.arena.view) == bytes(ref.monitor.arena.view)
+        assert WS_CACHE.stats()["reads"] == 1   # tails collapsed to one read
+    finally:
+        for p in pipes:
+            p.close()
+        ref.close()
+
+
+def test_pipeline_close_joins_live_tail(recorded, slow_tail):
+    """close() on a pipeline with a live tail cancels + joins it before
+    releasing the arena mmap (no crash, no hang)."""
+    slow_tail(lambda tail, i: time.sleep(0.005))
+    pipe = _restore(recorded, OVERLAP)
+    assert pipe.tail is not None and not pipe.tail.done()
+    pipe.close()                                # must not raise or hang
+    assert pipe.tail is None
+
+
+# -- serving-layer safety around live tails -----------------------------
+
+
+@pytest.fixture(scope="module")
+def overlap_served(tmp_path_factory):
+    """Orchestrator built through ServeConfig (overlap ON) with one
+    registered + recorded function."""
+    import jax
+    from repro.configs import SMOKES
+    from repro.launch import steps
+    from repro.serving import Orchestrator, ServeConfig
+
+    store = str(tmp_path_factory.mktemp("overlapstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 32, 2, "train", jax.random.key(0))
+    orch = Orchestrator(store, ServeConfig(warm_limit=8))
+    assert orch.reap.overlap_install
+    orch.register("fn", cfg, warmup_batch=batch)
+    ref, _ = orch.invoke("fn", batch)            # record phase
+    orch.scale_to_zero("fn")
+    yield orch, batch, np.asarray(ref)
+    orch.close()
+
+
+def test_reaper_skips_live_tail_and_forced_paths_cancel(
+        overlap_served, slow_tail):
+    """reap_idle never tears down a tail-installing instance; the forced
+    paths (scale_to_zero) cancel the tail and reclaim it."""
+    orch, batch, _ = overlap_served
+    slow_tail(lambda tail, i: time.sleep(0.01))
+    inst = orch.spawn_batch("fn", 1)[0]
+    rec = orch.functions["fn"]
+    try:
+        assert inst._tail is not None and not inst._tail.done()
+        with rec.lock:
+            rec.idle.append(inst)
+        orch.set_policy("fn", keepalive_s=0.0)
+        assert not inst.try_reclaim()            # live tail => refuse
+        orch.reap_idle()
+        with rec.lock:
+            assert inst in rec.idle              # the sweep kept it
+    finally:
+        orch.set_policy("fn", keepalive_s=None)
+        orch.scale_to_zero("fn")                 # forced: cancels + reclaims
+    with rec.lock:
+        assert inst not in rec.idle
+    from repro.serving import State
+    assert inst.state is State.RECLAIMED
+
+
+def test_cold_burst_with_overlap_correct_and_router_closes(
+        overlap_served, slow_tail):
+    """A k-deep cold burst through the router with overlap on returns
+    correct logits per invocation, attributes tail-wait time in the
+    summary, and router.close() with live tails neither hangs nor crashes."""
+    from repro.serving import Router, RouterConfig, summarize
+
+    orch, batch, ref = overlap_served
+    slow_tail(lambda tail, i: time.sleep(0.001))
+    orch.scale_to_zero("fn")
+    k = 4
+    router = Router(orch, RouterConfig(
+        max_concurrency=k, max_instances_per_function=k,
+        batch_restore_limit=k), start=False)
+    invs = [router.submit("fn", batch, force_cold=True) for _ in range(k)]
+    router.start()
+    outs = [inv.result(timeout=120) for inv in invs]
+    router.close()
+    for logits, rep in outs:
+        np.testing.assert_array_equal(np.asarray(logits), ref)
+        assert rep.load_vmm_s > 0                # really went cold
+    s = summarize([rep for _, rep in outs])
+    assert set(s["stage_seconds"]) == set(StageTimings().as_dict())
+    assert "tail_wait_s" in s["stage_seconds"]
+    assert s["tail_waits"] >= 0
+    orch.tail_quiesce(timeout=60)
+    assert orch.tail_stats()["live"] == 0
+    orch.scale_to_zero("fn")
+
+
+# -- ServeConfig + report API redesign ----------------------------------
+
+
+def test_serveconfig_resolves_overlap_knobs(tmp_path):
+    from repro.serving import Orchestrator, ServeConfig
+    cfg = ServeConfig(hot_prefix_frac=0.5, tail_workers=3,
+                      tail_deadline_s=1.5)
+    r = cfg.resolved_reap()
+    assert (r.overlap_install, r.hot_prefix_frac, r.tail_workers,
+            r.tail_deadline_s) == (True, 0.5, 3, 1.5)
+    orch = Orchestrator(str(tmp_path / "s"), cfg)
+    assert orch.reap.hot_prefix_frac == 0.5
+    assert orch.config is cfg
+
+
+def test_orchestrator_legacy_kwargs_shim(tmp_path):
+    import warnings
+    from repro.serving import Orchestrator, ServeConfig
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        orch = Orchestrator(str(tmp_path / "s"), reap=ReapConfig(),
+                            mode="vanilla", keepalive_s=1.5, warm_limit=3)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert (orch.mode, orch.keepalive_s, orch.warm_limit) == ("vanilla", 1.5, 3)
+    assert not orch.reap.overlap_install         # legacy keeps PR-5 contract
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Orchestrator(str(tmp_path / "s2"), ServeConfig())  # new path: silent
+
+
+def test_workernode_legacy_kwargs_shim(tmp_path):
+    import warnings
+    from repro.cluster import WorkerNode
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        node = WorkerNode("n0", str(tmp_path / "s"), max_concurrency=2,
+                          queue_depth=7, keepalive_s=2.0, warm_limit=5)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert node.router.cfg.max_concurrency == 2
+    assert node.router.cfg.queue_depth == 7
+    assert node.orch.keepalive_s == 2.0 and node.orch.warm_limit == 5
+    assert not node.orch.reap.overlap_install
+    node.close()
+    with pytest.raises(TypeError):
+        WorkerNode("n1", str(tmp_path / "s"), bogus_kwarg=1)
+
+
+def test_report_stages_are_source_of_truth():
+    st = StageTimings(load_vmm_s=1.0, connection_s=2.0, ws_fetch_s=3.0,
+                      install_s=4.0, tail_wait_s=0.5)
+    rep = ColdStartReport(stages=st, processing_s=1.0)
+    assert rep.load_vmm_s == 1.0 and rep.connection_s == 2.0
+    assert rep.prefetch_s == 7.0 and rep.install_s == 4.0
+    assert rep.tail_wait_s == 0.5
+    assert rep.total_s == 1.0 + 2.0 + 7.0 + 1.0
+    with pytest.raises(AttributeError):
+        rep.load_vmm_s = 9.0                     # flat names are read-only
+    rep2 = dataclasses.replace(rep, queue_s=0.25)  # router's compat path
+    assert rep2.e2e_s == rep.total_s + 0.25
+
+
+# -- trace cap + cut point ----------------------------------------------
+
+
+def test_trace_capped_outside_record_mode(recorded):
+    """Serving-mode (prefetch) arenas must not accumulate the fault trace;
+    record mode (incl. the §7.2 fallback) must."""
+    gm = recorded
+    pipe = _restore(gm, ReapConfig())
+    assert pipe.monitor.mode == "prefetch"
+    arena = pipe.monitor.arena
+    assert not arena.record_trace
+    boot = sorted(gm.layout.pages_of("boot/opt"))
+    arena.touch_pages(boot)                      # residual disk faults...
+    assert arena.stats.trace == []               # ...don't grow the trace
+    assert arena.stats.n_faults == len(boot)     # but still count
+    pipe.monitor.mode = "record"                 # §7.2 fallback re-arms it
+    assert arena.record_trace
+    pipe.close()
+
+    raw = InstanceArena(GuestMemoryFile.open(gm.base))
+    raw.tensor("infra/tab")                      # raw arenas still record
+    assert raw.stats.trace
+    assert len(raw.stats.trace_t) == len(raw.stats.trace)
+    raw.close()
+
+
+def test_choose_hot_prefix_finds_knee_and_falls_back():
+    # 30 boot-phase faults 0.1ms apart, a 0.5s knee, then 70 more
+    times = [i * 1e-4 for i in range(30)]
+    times += [times[-1] + 0.5 + i * 1e-4 for i in range(70)]
+    assert reap_mod.choose_hot_prefix(times) == 30
+    # flat spacing carries no signal: caller falls back to hot_prefix_frac
+    flat = [i * 1e-4 for i in range(100)]
+    assert reap_mod.choose_hot_prefix(flat) is None
+    assert reap_mod.choose_hot_prefix([0.0, 1.0]) is None  # tiny trace
+
+
+def test_write_record_persists_cut_point(recorded, tmp_path):
+    gm = recorded
+    # re-record with timestamps exhibiting a knee after 10 pages
+    pages = [int(p) for p in np.load(reap_mod.trace_path(gm.base))]
+    times = [i * 1e-4 for i in range(10)]
+    times += [times[-1] + 1.0 + i * 1e-4 for i in range(len(pages) - 10)]
+    reap_mod.write_record(gm.base, pages, times)
+    assert reap_mod.read_hot_prefix(gm.base) == 10
+    pipe = RestorePipeline(gm.base, OVERLAP)
+    assert pipe.hot_count(len(pages)) == 10      # cut beats the blind frac
+    # a knee-less re-record must drop the stale cut (back to the frac knob)
+    reap_mod.write_record(gm.base, pages, [i * 1e-4 for i in range(len(pages))])
+    assert reap_mod.read_hot_prefix(gm.base) is None
+    pipe = RestorePipeline(gm.base, OVERLAP)
+    assert pipe.hot_count(len(pages)) == max(
+        1, int(round(len(pages) * OVERLAP.hot_prefix_frac)))
+    reap_mod.drop_record(gm.base)
+    assert reap_mod.read_hot_prefix(gm.base) is None
+
+
+def test_tail_wait_stats_attributed_in_report(overlap_served, slow_tail):
+    """An invocation whose faults blocked on the tail reports tail_waits
+    and stages.tail_wait_s > 0."""
+    orch, batch, ref = overlap_served
+    slow_tail(lambda tail, i: time.sleep(0.01))
+    orch.scale_to_zero("fn")
+    logits, rep = orch.invoke("fn", batch, force_cold=True)
+    np.testing.assert_array_equal(np.asarray(logits), ref)
+    assert rep.load_vmm_s > 0
+    # the cold invocation's own faults may or may not land on tail pages
+    # (run_invocation touches in fault order = hot prefix first), but the
+    # stats plumbing must be present either way
+    assert rep.tail_waits >= 0
+    assert rep.stages.tail_wait_s >= 0.0
+    orch.tail_quiesce(timeout=60)
+    orch.scale_to_zero("fn")
