@@ -310,7 +310,7 @@ def _spillover_metrics(placed, names, *, ramp_at_s, label, verbose) -> dict:
     home: dict[str, str] = {}
     for name in names:
         counts: dict[str, int] = {}
-        for ev, rep, node in placed:
+        for ev, _rep, node in placed:
             if node is not None and ev.function == name and ev.t < ramp_at_s:
                 counts[node] = counts.get(node, 0) + 1
         if counts:

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Run the repo's static concurrency/invariant analysis.
+
+Usage:
+    python scripts/analyze.py                 # human-readable findings
+    python scripts/analyze.py --json          # machine-readable JSON
+    python scripts/analyze.py --check         # CI gate: nonzero exit on
+                                              # any finding not in the
+                                              # baseline file
+    python scripts/analyze.py --write-baseline  # accept current findings
+
+The baseline (``analysis-baseline.json``) maps finding keys to a short
+justification.  ``--check`` fails on unbaselined findings and warns (exit 0)
+about stale baseline entries that no longer fire, so the file can only
+shrink or be consciously grown.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+DEFAULT_TARGET = os.path.join(ROOT, "src", "repro")
+DEFAULT_BASELINE = os.path.join(ROOT, "analysis-baseline.json")
+
+
+def load_baseline(path: str) -> dict[str, str]:
+    if not os.path.exists(path):
+        return {}
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict):
+        raise SystemExit(f"baseline {path} must be a JSON object of "
+                         "{finding-key: justification}")
+    return data
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=DEFAULT_TARGET,
+                    help="package directory to analyze (default: src/repro)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON of accepted findings")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any finding is not baselined")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write all current findings into the baseline "
+                         "(justifications default to TODO)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import run_all
+
+    findings = run_all(args.root)
+    baseline = load_baseline(args.baseline)
+
+    if args.write_baseline:
+        merged = {f.key: baseline.get(f.key, "TODO: justify")
+                  for f in findings}
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump(merged, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {len(merged)} baseline entries to {args.baseline}")
+        return 0
+
+    fresh = [f for f in findings if f.key not in baseline]
+    accepted = [f for f in findings if f.key in baseline]
+    stale = sorted(set(baseline) - {f.key for f in findings})
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.to_dict() for f in findings],
+            "fresh": [f.key for f in fresh],
+            "baselined": [f.key for f in accepted],
+            "stale_baseline_entries": stale,
+        }, indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+        if accepted:
+            print(f"-- {len(accepted)} baselined finding(s) suppressed "
+                  f"(see {os.path.basename(args.baseline)})")
+        for key in stale:
+            print(f"-- warning: stale baseline entry no longer fires: {key}")
+        print(f"{len(fresh)} finding(s), {len(accepted)} baselined, "
+              f"{len(stale)} stale baseline entr(ies)")
+
+    if args.check and fresh:
+        print(f"\n--check: {len(fresh)} unbaselined finding(s); fix them or "
+              f"add a justified entry to {os.path.basename(args.baseline)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

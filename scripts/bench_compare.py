@@ -39,6 +39,13 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 ARTIFACTS = ("BENCH_scalability.json", "BENCH_cluster.json")
 
+#: Top-level sections each artifact must carry; a missing one is reported
+#: by name (nonzero exit) instead of surfacing as a bare KeyError later.
+EXPECTED_SECTIONS = {
+    "BENCH_scalability.json": ("burst_ab", "overlap_ab", "policy_ab"),
+    "BENCH_cluster.json": ("placement_ab", "demand_plane"),
+}
+
 
 def _dig(d: dict, path: str):
     """Fetch ``a.b.c`` from nested dicts; None when any hop is missing."""
@@ -59,8 +66,10 @@ def _guards(name: str, artifact: dict) -> list[tuple[str, str]]:
             guards.append((f"burst_ab.{k}.batched.cold_e2e_p95_s", "up"))
         if _dig(artifact, "overlap_ab.overlap.cold_restore_p95_s") is not None:
             guards.append(("overlap_ab.overlap.cold_restore_p95_s", "up"))
-        for trace in (artifact.get("policy_ab") or {}):
-            for arm in artifact["policy_ab"][trace]:
+        for trace, arms in (artifact.get("policy_ab") or {}).items():
+            if not isinstance(arms, dict):
+                continue                 # malformed trace entry: no guards
+            for arm in arms:
                 guards.append(
                     (f"policy_ab.{trace}.{arm}.ws_cache_hit_rate", "down"))
     elif name == "BENCH_cluster.json":
@@ -81,6 +90,20 @@ def _guards(name: str, artifact: dict) -> list[tuple[str, str]]:
     return guards
 
 
+def _load(path: str) -> tuple[dict | None, str | None]:
+    """(artifact, error): a malformed or non-object artifact is a named
+    failure, never a traceback."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except json.JSONDecodeError as e:
+        return None, f"{os.path.basename(path)}: malformed JSON ({e})"
+    if not isinstance(data, dict):
+        return None, (f"{os.path.basename(path)}: expected a JSON object, "
+                      f"got {type(data).__name__}")
+    return data, None
+
+
 def compare(name: str, threshold: float) -> list[str]:
     """Returns failure strings for ``name``; empty when within budget."""
     cur_path = os.path.join(ROOT, name)
@@ -89,17 +112,32 @@ def compare(name: str, threshold: float) -> list[str]:
         return [f"{name}: artifact missing (run the quick benchmark first)"]
     if not os.path.exists(base_path):
         return [f"{name}: no committed baseline at {base_path}"]
-    with open(cur_path) as f:
-        cur = json.load(f)
-    with open(base_path) as f:
-        base = json.load(f)
+    cur, err = _load(cur_path)
+    if err:
+        return [err]
+    base, err = _load(base_path)
+    if err:
+        return [f"baseline {err}"]
 
     failures = []
+    for section in EXPECTED_SECTIONS.get(name, ()):
+        if section not in base:
+            failures.append(f"{name}: expected key {section!r} missing "
+                            "from the committed baseline")
+        if section not in cur:
+            failures.append(f"{name}: expected key {section!r} missing "
+                            "from the artifact (benchmark ran partially?)")
     for path, direction in _guards(name, base):
         b, c = _dig(base, path), _dig(cur, path)
         if b is None or c is None:
-            failures.append(f"{name}:{path}: metric missing "
+            missing_in = "baseline" if b is None else "artifact"
+            failures.append(f"{name}: guarded metric {path!r} missing from "
+                            f"the {missing_in} "
                             f"(baseline={b}, current={c})")
+            continue
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            failures.append(f"{name}: guarded metric {path!r} is not "
+                            f"numeric (baseline={b!r}, current={c!r})")
             continue
         if not b:                      # zero baseline carries no signal
             continue

@@ -39,6 +39,8 @@ import time
 from ..serving.forecast import ForecastConfig, ForecastDemand
 from ..serving.policy import PolicyConfig
 
+_NO_NODES: frozenset[str] = frozenset()
+
 FLEET_TAP = "fleet-demand"
 
 
@@ -121,7 +123,7 @@ class DemandAggregator:
                 return owners
         return list(alive.values())
 
-    def _clear(self, name: str, keep: set[str] = frozenset()) -> None:
+    def _clear(self, name: str, keep: set[str] = _NO_NODES) -> None:
         """Withdraw ``name``'s hints from every node not in ``keep``."""
         for node_id in self.pushed.get(name, set()) - set(keep):
             node = self.cluster.nodes.get(node_id)

@@ -98,8 +98,8 @@ class ClusterInvocation:
         """Block for (output, report).  A placement that died reroutes
         transparently; raises only terminal errors (admission exhaustion,
         reroute budget, a real invocation failure, or timeout)."""
-        deadline = (None if timeout is None
-                    else time.perf_counter() + timeout)
+        clock = self._cluster.clock
+        deadline = None if timeout is None else clock() + timeout
         while True:
             with self._mu:
                 if self._terminal is not None:
@@ -111,7 +111,7 @@ class ClusterInvocation:
                 self._cluster._forget(self)
                 raise err
             left = (None if deadline is None
-                    else max(deadline - time.perf_counter(), 0.0))
+                    else max(deadline - clock(), 0.0))
             try:
                 out = inv.result(left)
             except (RouterClosedError, NodeDownError):
@@ -138,11 +138,14 @@ class ClusterRouter:
     def __init__(self, nodes: list[WorkerNode] | tuple[WorkerNode, ...] = (),
                  *, store: ShardedSnapshotStore | None = None,
                  cfg: ScheduleConfig | None = None,
-                 demand: DemandConfig | None = None):
+                 demand: DemandConfig | None = None,
+                 clock=time.perf_counter):
         """``demand``: when given, a fleet-wide :class:`DemandAggregator`
         runs (demand.py) — every node's arrivals merge into per-function
-        forecasts pushed to the owner-shard nodes' prewarm policies."""
+        forecasts pushed to the owner-shard nodes' prewarm policies.
+        ``clock`` times result/drain deadlines (injectable for tests)."""
         self.cfg = cfg or ScheduleConfig()
+        self.clock = clock
         if self.cfg.placement not in ("locality", "random"):
             raise ValueError(f"unknown placement {self.cfg.placement!r}")
         self.store = store
@@ -262,11 +265,10 @@ class ClusterRouter:
         return warmed
 
     def drain(self, timeout: float | None = None) -> None:
-        deadline = (None if timeout is None
-                    else time.perf_counter() + timeout)
+        deadline = None if timeout is None else self.clock() + timeout
         for node in self.alive_nodes():
             left = (None if deadline is None
-                    else max(deadline - time.perf_counter(), 0.001))
+                    else max(deadline - self.clock(), 0.001))
             node.router.drain(left)
 
     def close(self) -> None:

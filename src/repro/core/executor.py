@@ -179,14 +179,14 @@ def run_invocation(cfg: ModelConfig, arena: InstanceArena, batch: dict, *,
 
     if cfg.first_dense:
         for i in range(cfg.first_dense):
-            lpar = jax.tree.map(lambda a: a[i], params["first_dense"])
+            lpar = jax.tree.map(lambda a, i=i: a[i], params["first_dense"])
             x = _jit_dense_layer(cfg, lpar, x)
 
     for g in range(moe_mod.n_groups(cfg)):
-        gp = jax.tree.map(lambda a: a[g], params["groups"])
+        gp = jax.tree.map(lambda a, g=g: a[g], params["groups"])
         if "dense_layers" in gp:
             for j in range(cfg.moe_every - 1):
-                lpar = jax.tree.map(lambda a: a[j], gp["dense_layers"])
+                lpar = jax.tree.map(lambda a, j=j: a[j], gp["dense_layers"])
                 x = _jit_dense_layer(cfg, lpar, x)
         # route on the true activations, then fault only the routed experts
         mp = gp["moe_layer"]

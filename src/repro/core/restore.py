@@ -42,7 +42,7 @@ from .reap import (WS_CACHE, Monitor, ReapConfig, StageTimings, _read_ws,
 __all__ = [
     "STAGES", "StageTimings", "TailInstall", "RestorePipeline",
     "RestoreBatch", "connect_handshake", "default_fuse_engine",
-    "fuse_ws_block",
+    "fuse_ws_block", "shutdown_tail_pool",
 ]
 
 #: Stage names in execution order (benchmarks iterate this).
@@ -66,6 +66,21 @@ def _tail_pool(workers: int) -> ThreadPoolExecutor:
         return _TAIL_POOL
 
 
+def shutdown_tail_pool(wait: bool = True) -> None:
+    """Join the shared tail-install pool's threads (idempotent).
+
+    Tails themselves are cancel/join-able per instance
+    (:meth:`TailInstall.cancel`); this releases the *pool* — process
+    teardown, or tests asserting no thread leaks.  The next TailInstall
+    lazily rebuilds it.
+    """
+    global _TAIL_POOL
+    with _TAIL_POOL_LOCK:
+        pool, _TAIL_POOL = _TAIL_POOL, None
+    if pool is not None:
+        pool.shutdown(wait=wait)
+
+
 class TailInstall:
     """Background fetch+install of the working-set tail after materialize.
 
@@ -86,7 +101,8 @@ class TailInstall:
     throttle = None
 
     def __init__(self, arena: InstanceArena, pages, block=None, *,
-                 fetch=None, deadline_s: float = 5.0, workers: int = 2):
+                 fetch=None, deadline_s: float = 5.0, workers: int = 2,
+                 clock=time.perf_counter):
         if block is None and fetch is None:
             raise ValueError("TailInstall needs a block or a fetch")
         self.arena = arena
@@ -96,8 +112,9 @@ class TailInstall:
         self.fetch_s = 0.0
         self.deadline_s = deadline_s
         self.demoted = False
-        self.done_at: float | None = None   # perf_counter at full residency
-        self.t0 = time.perf_counter()
+        self.clock = clock
+        self.done_at: float | None = None   # clock() at full residency
+        self.t0 = clock()
         self._cancel = threading.Event()
         arena.begin_pending(self.pages)
         self._future = _tail_pool(workers).submit(self._run)
@@ -108,19 +125,19 @@ class TailInstall:
                 if self._cancel.is_set():
                     self.arena.cancel_pending(self.pages, demote=False)
                     return
-                if time.perf_counter() - self.t0 > self.deadline_s:
+                if self.clock() - self.t0 > self.deadline_s:
                     self.arena.cancel_pending(self.pages, demote=True)
                     self.demoted = True
                     return
-                t0 = time.perf_counter()
+                t0 = self.clock()
                 self.block = self.fetch()
-                self.fetch_s = time.perf_counter() - t0
+                self.fetch_s = self.clock() - t0
             n = len(self.pages)
             for i in range(0, n, self.CHUNK_PAGES):
                 if self._cancel.is_set():
                     self.arena.cancel_pending(self.pages[i:], demote=False)
                     return
-                if time.perf_counter() - self.t0 > self.deadline_s:
+                if self.clock() - self.t0 > self.deadline_s:
                     # straggler: demote the rest to the disk-fault path
                     self.arena.cancel_pending(self.pages[i:], demote=True)
                     self.demoted = True
@@ -129,7 +146,7 @@ class TailInstall:
                     TailInstall.throttle(self, i)
                 j = i + self.CHUNK_PAGES
                 self.arena.install_pending(self.pages[i:j], self.block[i:j])
-            self.done_at = time.perf_counter()
+            self.done_at = self.clock()
         except BaseException:
             # never leave waiters parked on pages nobody will install
             self.arena.cancel_pending(self.pages)
@@ -378,7 +395,7 @@ class RestorePipeline:
         self.tail = TailInstall(
             self.monitor.arena, pages, block, fetch=fetch,
             deadline_s=self.reap.tail_deadline_s,
-            workers=self.reap.tail_workers)
+            workers=self.reap.tail_workers, clock=self.clock)
 
     def install(self, fetched) -> None:
         """Single-instance eager install (per-page ``install_span`` path).

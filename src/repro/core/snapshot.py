@@ -69,7 +69,7 @@ def build_instance_snapshot(cfg: ModelConfig, base: str, *, seed: int = 0,
     host = nnspec.host_initialize(specs, seed=seed)
     arrays: dict[str, np.ndarray] = {}
     rng = np.random.default_rng(seed)
-    for path, shape, dtype, region in tensors:
+    for path, shape, dtype, _region in tensors:
         if path.startswith("params/"):
             arrays[path] = host[path[len("params/"):]]
         elif path.startswith("boot/master/"):

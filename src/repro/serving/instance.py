@@ -78,15 +78,22 @@ class FunctionInstance:
     """
 
     _ids = itertools.count()
+    # class-level defaults so state-machine methods work on instances built
+    # without __init__ (tests construct bare instances via __new__)
+    clock = staticmethod(time.monotonic)
+    perf_clock = staticmethod(time.perf_counter)
 
     def __init__(self, name: str, cfg: ModelConfig, base: str,
                  reap: ReapConfig, *, mode: str = "auto",
-                 prewarmed: bool = False, ws_cache=None):
+                 prewarmed: bool = False, ws_cache=None,
+                 clock=time.monotonic, perf_clock=time.perf_counter):
         """``prewarmed=True`` marks an instance spawned by the control plane
         *off* the invocation path: its load/connect/prefetch costs were paid
         by a pool thread, so no invocation report ever charges them.
         ``ws_cache`` selects the WS page cache for the REAP prefetch (None
-        => the process-wide default; cluster nodes pass their own)."""
+        => the process-wide default; cluster nodes pass their own).
+        ``clock`` stamps ``last_used`` (compared against the reaper's
+        monotonic clock); ``perf_clock`` times invocation processing."""
         self.name = name
         self.cfg = cfg
         self.base = base
@@ -94,11 +101,13 @@ class FunctionInstance:
         self.mode = mode
         self.prewarmed = prewarmed
         self.ws_cache = ws_cache
+        self.clock = clock
+        self.perf_clock = perf_clock
         self.instance_id = next(FunctionInstance._ids)
         self._state_lock = threading.Lock()
         self.state = State.LOADING
         self.report = ColdStartReport()
-        self.last_used = time.monotonic()
+        self.last_used = clock()
         self.gm = None
         self.monitor = None
         self._warm_params = None
@@ -129,7 +138,7 @@ class FunctionInstance:
             ws_cache_hit=pipe.monitor.ws_cache_hit,
             prewarmed=self.prewarmed,
             batch_size=batch_size)
-        self.last_used = time.monotonic()
+        self.last_used = self.clock()
         self.state = State.IDLE
 
     def restore(self) -> "FunctionInstance":
@@ -152,7 +161,7 @@ class FunctionInstance:
         with self._state_lock:
             if self.state is State.BUSY:
                 self.state = State.IDLE
-            self.last_used = time.monotonic()
+            self.last_used = self.clock()
 
     def try_reclaim(self) -> bool:
         """IDLE -> RECLAIMED; never tears down a BUSY instance, and never
@@ -181,7 +190,7 @@ class FunctionInstance:
         stats = self.monitor.arena.stats
         f0, fs0 = stats.n_faults, stats.fault_seconds
         tw0, tws0 = stats.tail_waits, stats.tail_wait_seconds
-        t0 = time.perf_counter()
+        t0 = self.perf_clock()
         if self._warm_params is not None:
             logits = ExecutableCache.get(self.cfg)(self._warm_params, batch)
             logits.block_until_ready()
@@ -189,7 +198,7 @@ class FunctionInstance:
             logits, _ = run_invocation(self.cfg, self.monitor.arena, batch,
                                        parallel=parallel_faults)
             logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = self.perf_clock() - t0
         first = self._n_invocations == 0
         self._n_invocations += 1
         # fresh per-invocation report; load/connect/prefetch costs belong to
@@ -226,7 +235,7 @@ class FunctionInstance:
             n_faults=stats.n_faults - f0,
             tail_waits=stats.tail_waits - tw0,
         )
-        self.last_used = time.monotonic()
+        self.last_used = self.clock()
         return logits, dt
 
     def make_warm(self):

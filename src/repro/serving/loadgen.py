@@ -264,11 +264,14 @@ class OpenLoopGenerator:
     """
 
     def __init__(self, router: Router, trace: Trace,
-                 make_batch: BatchFactory, *, speedup: float = 1.0):
+                 make_batch: BatchFactory, *, speedup: float = 1.0,
+                 clock=time.perf_counter, sleep=time.sleep):
         self.router = router
         self.trace = trace
         self.make_batch = make_batch
         self.speedup = speedup
+        self.clock = clock
+        self.sleep = sleep
 
     def run(self) -> list[tuple[TraceEvent, ColdStartReport | None]]:
         """Returns (event, report) per event; report None when throttled.
@@ -280,12 +283,12 @@ class OpenLoopGenerator:
         """
         pending: list[tuple[TraceEvent, object]] = []
         rejected: list[TraceEvent] = []
-        t0 = time.perf_counter()
+        t0 = self.clock()
         for ev in self.trace.events:
             target = ev.t / self.speedup
-            delay = target - (time.perf_counter() - t0)
+            delay = target - (self.clock() - t0)
             if delay > 0:
-                time.sleep(delay)
+                self.sleep(delay)
             try:
                 pending.append(
                     (ev, self.router.submit(ev.function, self.make_batch(ev))))
@@ -305,12 +308,14 @@ class ClosedLoopGenerator:
     """N concurrent clients, each looping submit -> wait -> think."""
 
     def __init__(self, router: Router, trace: Trace, make_batch: BatchFactory,
-                 *, n_clients: int = 4, think_time_s: float = 0.0):
+                 *, n_clients: int = 4, think_time_s: float = 0.0,
+                 sleep=time.sleep):
         self.router = router
         self.trace = trace
         self.make_batch = make_batch
         self.n_clients = n_clients
         self.think_time_s = think_time_s
+        self.sleep = sleep
 
     def run(self) -> list[tuple[TraceEvent, ColdStartReport | None]]:
         """Returns (event, report) per event; report None when the submit
@@ -346,7 +351,7 @@ class ClosedLoopGenerator:
                 with out_lock:
                     out.append((ev, rep))
                 if self.think_time_s:
-                    time.sleep(self.think_time_s)
+                    self.sleep(self.think_time_s)
 
         threads = [threading.Thread(target=client, name=f"client-{i}",
                                     daemon=True)

@@ -81,7 +81,8 @@ class Orchestrator:
     def __init__(self, store_dir: str, config: ServeConfig | None = None, *,
                  reap: ReapConfig | None = None, mode: str | None = None,
                  keepalive_s: float | None = None, warm_limit: int | None = None,
-                 prewarm_concurrency: int | None = None, ws_cache=None):
+                 prewarm_concurrency: int | None = None, ws_cache=None,
+                 clock=time.monotonic):
         """``config`` (a :class:`~repro.serving.ServeConfig`) is the
         recommended construction path; it also enables overlapped restore
         by default.  The loose keyword knobs (``reap``, ``mode``,
@@ -118,6 +119,7 @@ class Orchestrator:
                     tail_deadline_s=r.tail_deadline_s)
             config = dataclasses.replace(config, **legacy)
         self.config = config
+        self.clock = clock   # monotonic seconds: keepalive/quiesce deadlines
         self.store_dir = store_dir
         self.reap = config.resolved_reap()
         self.mode = config.mode
@@ -179,11 +181,25 @@ class Orchestrator:
     def scale_to_zero(self, name: str) -> None:
         """Reclaim every idle/fresh instance of ``name``.  Unlike the
         keepalive reaper this is a *forced* path: live background tail
-        installs are cancelled (and joined) so the arenas actually close."""
+        installs are cancelled (and joined) so the arenas actually close.
+
+        The pools are snapshotted (and emptied) under ``rec.lock`` but the
+        reclaims run *outside* it: cancelling a live tail joins its worker
+        future (up to seconds), and holding the record condvar across that
+        join would stall every invoke/release on this function — and order
+        ``rec.lock`` under the tail worker's own blocking.  Instances the
+        reclaim must keep (a BUSY straggler) are re-parked afterwards.
+        """
         rec = self.functions[name]
         with rec.lock:
-            rec.idle = [i for i in rec.idle if not self._force_reclaim(i)]
-            rec.fresh = [i for i in rec.fresh if not self._force_reclaim(i)]
+            idle, rec.idle = rec.idle, []
+            fresh, rec.fresh = rec.fresh, []
+        keep_idle = [i for i in idle if not self._force_reclaim(i)]
+        keep_fresh = [i for i in fresh if not self._force_reclaim(i)]
+        if keep_idle or keep_fresh:
+            with rec.lock:
+                rec.idle.extend(keep_idle)
+                rec.fresh.extend(keep_fresh)
 
     def set_policy(self, name: str, *, warm_limit: int | None = None,
                    keepalive_s: float | None = None,
@@ -256,11 +272,11 @@ class Orchestrator:
 
         ``timeout`` bounds the *total* wait, not the wait per prewarm.
         """
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self.clock() + timeout
         with self._lock:
             futs = list(self._prewarm_futures)
         for f in futs:
-            left = None if deadline is None else deadline - time.monotonic()
+            left = None if deadline is None else deadline - self.clock()
             f.result(left)
 
     def _prewarm_group(self, rec: FunctionRecord, n: int) -> None:
@@ -304,13 +320,13 @@ class Orchestrator:
         """Block until every tracked background tail install has finished
         (installed, demoted, or cancelled); returns how many were waited
         on.  ``timeout`` bounds the total wait."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self.clock() + timeout
         with self._lock:
             tails = list(self._tails)
         n = 0
         for t in tails:
             left = None if deadline is None else max(
-                deadline - time.monotonic(), 0.001)
+                deadline - self.clock(), 0.001)
             try:
                 t.wait(left)
             except BaseException:
@@ -364,7 +380,7 @@ class Orchestrator:
         never-invoked) instances expire on the same deadline but are not
         protected by the floor — they are surplus from an over-sized group.
         """
-        now = time.monotonic()
+        now = self.clock()
         n = 0
         with self._lock:
             records = list(self.functions.values())
@@ -424,7 +440,7 @@ class Orchestrator:
         mode = "vanilla" if self.mode == "vanilla" else "auto"
         insts = [FunctionInstance(rec.name, rec.cfg, rec.base, self.reap,
                                   mode=mode, prewarmed=prewarmed,
-                                  ws_cache=self.ws_cache)
+                                  ws_cache=self.ws_cache, clock=self.clock)
                  for _ in range(n)]
         restore_group(insts, materialize=materialize)
         tails = [i._tail for i in insts if i._tail is not None]

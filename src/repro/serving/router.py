@@ -55,11 +55,12 @@ class RouterConfig:
 class Invocation:
     """Future for one accepted invocation."""
 
-    def __init__(self, name: str, batch: dict, force_cold: bool):
+    def __init__(self, name: str, batch: dict, force_cold: bool,
+                 *, clock=time.perf_counter):
         self.name = name
         self.batch = batch
         self.force_cold = force_cold
-        self.t_submit = time.perf_counter()
+        self.t_submit = clock()
         self.queue_s = 0.0
         self.group_hint = 1              # set at dispatch: cold-group size
         self._done = threading.Event()
@@ -98,9 +99,15 @@ class Router:
     """
 
     def __init__(self, orch: Orchestrator, cfg: RouterConfig | None = None,
-                 *, start: bool = True):
+                 *, start: bool = True, clock=time.perf_counter,
+                 arrival_clock=time.monotonic):
         self.orch = orch
         self.cfg = cfg or RouterConfig()
+        # queue/drain deltas use ``clock``; arrival taps use
+        # ``arrival_clock`` because the policy/demand consumers compare
+        # those stamps against their own monotonic clocks
+        self.clock = clock
+        self.arrival_clock = arrival_clock
         self._cv = threading.Condition()
         self._queues: dict[str, deque[Invocation]] = {}
         self._rr: deque[str] = deque()     # round-robin function order
@@ -130,7 +137,7 @@ class Router:
 
         Raises :class:`AdmissionError` when the function's backlog is full.
         """
-        inv = Invocation(name, batch, force_cold)
+        inv = Invocation(name, batch, force_cold, clock=self.clock)
         with self._cv:
             if self._closed:
                 raise RouterClosedError("router is closed")
@@ -141,7 +148,7 @@ class Router:
                 self._inflight.setdefault(name, 0)
             # demand signal for the policy loop(s): every arrival counts,
             # including ones the admission controller is about to throttle
-            t_arr = time.monotonic()
+            t_arr = self.arrival_clock()
             for tap in self._taps.values():
                 arr = tap.get(name)
                 if arr is None:
@@ -180,11 +187,11 @@ class Router:
 
     def drain(self, timeout: float | None = None) -> None:
         """Block until every accepted invocation has resolved."""
-        deadline = None if timeout is None else time.perf_counter() + timeout
+        deadline = None if timeout is None else self.clock() + timeout
         with self._cv:
             while (any(self._queues.values())
                    or any(self._inflight.values())):
-                left = None if deadline is None else deadline - time.perf_counter()
+                left = None if deadline is None else deadline - self.clock()
                 if left is not None and left <= 0:
                     raise TimeoutError("router drain timed out")
                 self._cv.wait(timeout=left)
@@ -279,7 +286,7 @@ class Router:
                     inv = self._next_locked()
                 if inv is None:      # closed and nothing dispatchable
                     return
-            inv.queue_s = time.perf_counter() - inv.t_submit
+            inv.queue_s = self.clock() - inv.t_submit
             try:
                 out, rep = self.orch.invoke(inv.name, inv.batch,
                                             force_cold=inv.force_cold,

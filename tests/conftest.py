@@ -5,3 +5,28 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 for p in (os.path.join(ROOT, "src"), ROOT):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+_SANITIZE = os.environ.get("REPRO_LOCK_SANITIZER", "") not in ("", "0")
+if _SANITIZE:
+    # Must run before anything imports repro so module-level locks (e.g.
+    # core.restore's tail-pool lock) are created through the wrappers.
+    # Deferred mode: violations are collected and fail the session at the
+    # end instead of raising inside arbitrary worker threads.
+    from repro.analysis import sanitizer
+    sanitizer.STATE.raise_on_violation = False
+    sanitizer.enable()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _SANITIZE:
+        return
+    from repro.analysis import sanitizer
+    if sanitizer.STATE.violations:
+        rep = session.config.pluginmanager.get_plugin("terminalreporter")
+        for v in sanitizer.STATE.violations:
+            msg = sanitizer.render_violation(v)
+            if rep is not None:
+                rep.write_line(msg, red=True)
+            else:
+                print(msg, file=sys.stderr)
+        session.exitstatus = 1

@@ -1,0 +1,40 @@
+"""Seeded lockgraph violations: an A->B / B->A order inversion and a
+``time.sleep`` while holding a lock.  Never imported — parsed by the
+static analyzer in tests/test_analysis.py."""
+import threading
+import time
+
+
+class Alpha:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def forward(self):
+        with self._a:
+            with self._b:       # order edge Alpha._a -> Alpha._b
+                pass
+
+    def backward(self):
+        with self._b:
+            with self._a:       # order edge Alpha._b -> Alpha._a: CYCLE
+                pass
+
+    def sleepy(self):
+        with self._a:
+            time.sleep(0.5)     # held-across-blocking
+
+
+class Chained:
+    """The blocking call hides one call level down: the analyzer must
+    propagate the callee's blocking op to the locked caller."""
+
+    def __init__(self):
+        self._mu = threading.Lock()
+
+    def _slow(self):
+        time.sleep(0.1)
+
+    def entry(self):
+        with self._mu:
+            self._slow()        # held-across-blocking via _slow

@@ -1,0 +1,36 @@
+"""Seeded REP001/REP002/REP003/REP005 violations in a serving/ path.
+Never imported — parsed by the static analyzer in tests/test_analysis.py."""
+import time
+
+
+class State:
+    IDLE = 1
+    BUSY = 2
+
+
+WS_CACHE = object()
+
+
+def clock_bypass():
+    return time.monotonic()     # REP001: direct call in serving/
+
+
+def legal_seam(clock=time.monotonic):
+    """The injected-clock seam: a default-parameter *reference* is legal."""
+    return clock()
+
+
+def raw_state_write(inst):
+    inst.state = State.BUSY     # REP002: bypasses the state machine
+
+
+def cache_poke():
+    return WS_CACHE._entries    # REP003: private single-flight internals
+
+
+def flat_stage_write(report):
+    report.install_s = 1.0      # REP005: stage seconds outside StageTimings
+
+
+def legal_stage_write(timings):
+    timings.install_s = 1.0     # allowed: StageTimings receiver

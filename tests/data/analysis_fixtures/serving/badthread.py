@@ -1,0 +1,12 @@
+"""Seeded REP004 violations: a spawned thread with no join path and a
+bare ThreadPoolExecutor with no shutdown.  Never imported."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+POOL = ThreadPoolExecutor(max_workers=2)    # REP004: no .shutdown anywhere
+
+
+def fire_and_forget(fn):
+    t = threading.Thread(target=fn, daemon=True)   # REP004: no .join anywhere
+    t.start()
+    return t

@@ -116,7 +116,7 @@ def test_elastic_reshard_restore(tmp_path):
     base = save_checkpoint(str(tmp_path / "ck"), params, state, 1)
     fake_mesh = SimpleNamespace(shape={"data": 4}, axis_names=("data",))
     restored = restore_for_mesh(base, fam.param_specs(cfg), fake_mesh, {})
-    for (pa, a), (pb, b) in zip(
+    for (_pa, a), (_pb, b) in zip(
             sorted_leaves(params), sorted_leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
