@@ -51,6 +51,7 @@ def _build_cluster(store_dir, cfg, names, request, *, n_nodes, placement,
                    replication=1):
     from repro.cluster import ScheduleConfig, TransferModel, build_fleet
     from repro.serving import PolicyConfig, RouterConfig, ServeConfig
+    from repro.telemetry import TelemetryConfig
 
     # ~1 GbE with sub-ms RPC: slow enough that a smoke-sized WS (a few MB)
     # pays a visible transfer cost, so tier placement shows up in p95
@@ -63,7 +64,10 @@ def _build_cluster(store_dir, cfg, names, request, *, n_nodes, placement,
         policy=PolicyConfig(interval_s=0.05, window_s=2.0, max_warm=4,
                             min_keepalive_s=0.5),
         demand=demand,
-        transfer=TransferModel(latency_s=1e-3, gbps=1.0))
+        transfer=TransferModel(latency_s=1e-3, gbps=1.0),
+        # CI quick mode feeds the control room: every arm appends fleet
+        # time-series samples to results/telemetry/fleet.jsonl
+        telemetry=TelemetryConfig() if quick else None)
     cluster = build_fleet(
         n_nodes, store_dir, config=serve,
         cfg=ScheduleConfig(placement=placement, seed=42),

@@ -69,7 +69,7 @@ def _fmt_row(label: str, reports, wall_s: float) -> tuple:
                f"queue_mean={s['queue_mean_s']*1e3:.1f}ms "
                f"queue_p95={s['queue_p95_s']*1e3:.1f}ms "
                f"e2e_p95={s['e2e_p95_s']*1e3:.1f}ms "
-               f"ws_hits={s['ws_cache_hits']}")
+               f"ws_cache_hits={s['ws_cache_hits']}")
     return (label, s["total_mean_s"] * 1e6, derived)
 
 
@@ -308,6 +308,65 @@ def run_overlap_ab(function: str = "olmo-1b", *, quick: bool = False,
     return out
 
 
+def run_telemetry_overhead(function: str = "olmo-1b", *, quick: bool = False,
+                           verbose: bool = True) -> dict:
+    """Cold-burst A/B with the process-wide telemetry registry enabled vs
+    disabled: the lock-light counters/spans (telemetry/registry.py) must
+    cost <=2% on cold e2e p95, or observability is taxing the very path it
+    observes.  Reported: per-arm cold e2e p95 and the enabled/disabled
+    ratio (informational — CI's absolute/trend gates own pass/fail, this
+    number is run-to-run noisy on shared runners)."""
+    from repro.configs import SMOKES
+    from repro.core.reap import WS_CACHE
+    from repro.serving import (Orchestrator, Router, RouterConfig,
+                               percentile)
+    from repro.telemetry import TELEMETRY
+
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
+    store = common.ensure_store()
+    request = common.make_request(cfg, seed=1)
+    name = ("tlmq" if quick else "tlm") + f"_{function}"
+    orch = Orchestrator(store, mode="reap", warm_limit=0)
+    orch.register(name, cfg, warmup_batch=request)
+    orch.invoke(name, request)           # record phase
+    orch.scale_to_zero(name)
+
+    k = 8
+    out: dict = {"k": k}
+    try:
+        for arm, enabled in (("disabled", False), ("enabled", True)):
+            (TELEMETRY.enable if enabled else TELEMETRY.disable)()
+            common.drop_caches()
+            WS_CACHE.clear()
+            WS_CACHE.reset_stats()
+            orch.scale_to_zero(name)
+            router = Router(orch, RouterConfig(
+                max_concurrency=k, max_instances_per_function=k,
+                batch_restore_limit=k), start=False)
+            invs = [router.submit(name, request, force_cold=True)
+                    for _ in range(k)]
+            router.start()
+            reports = [inv.result(timeout=600)[1] for inv in invs]
+            router.close()
+            cold_e2e = [r.e2e_s for r in reports if r.load_vmm_s > 0]
+            out[arm] = {"cold_e2e_p95_s": round(percentile(cold_e2e, 95), 6)}
+            if verbose:
+                print(f"  telemetry {arm:9s} "
+                      f"cold_e2e_p95={out[arm]['cold_e2e_p95_s']*1e3:7.1f}ms")
+    finally:
+        TELEMETRY.enable()
+    base = out["disabled"]["cold_e2e_p95_s"]
+    if base > 0:
+        out["overhead_ratio"] = round(
+            out["enabled"]["cold_e2e_p95_s"] / base, 4)
+        if verbose:
+            print(f"  telemetry overhead: "
+                  f"{(out['overhead_ratio']-1)*100:+.1f}% on cold e2e p95")
+    orch.scale_to_zero(name)
+    orch.close()
+    return out
+
+
 def _trace_metrics(results, label: str, verbose: bool,
                    skip_until_s: float = 0.0) -> dict:
     """Metrics over the steady-state window (events at ``t >=
@@ -456,7 +515,8 @@ def run_policy_ab(function: str = "olmo-1b", *, quick: bool = False,
 
 
 def write_artifact(fig9_rows, policy_ab: dict, burst_ab: dict,
-                   overlap_ab: dict | None = None) -> None:
+                   overlap_ab: dict | None = None,
+                   telemetry_overhead: dict | None = None) -> None:
     artifact = {
         "benchmark": "scalability",
         "fig9": [{"label": label, "us_per_call": us, "derived": derived}
@@ -464,6 +524,7 @@ def write_artifact(fig9_rows, policy_ab: dict, burst_ab: dict,
         "policy_ab": policy_ab,
         "burst_ab": burst_ab,
         "overlap_ab": overlap_ab or {},
+        "telemetry_overhead": telemetry_overhead or {},
     }
     with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=2)
@@ -492,6 +553,8 @@ def main(argv=None):
     burst = run_burst_ab(args.function, quick=args.quick)
     print("\n-- overlapped-restore A/B: hot prefix + tail vs fully resident --")
     overlap = run_overlap_ab(args.function, quick=args.quick)
+    print("\n-- telemetry overhead A/B: registry enabled vs disabled --")
+    tlm = run_telemetry_overhead(args.function, quick=args.quick)
     ab: dict = {}
     if args.policy != "off":
         arms = (("reactive", "adaptive", "forecast")
@@ -499,7 +562,7 @@ def main(argv=None):
         ab = run_policy_ab(args.function, quick=args.quick, arms=arms,
                            trace_file=args.trace_file)
     if args.quick:
-        write_artifact(rows, ab, burst, overlap)
+        write_artifact(rows, ab, burst, overlap, tlm)
 
 
 if __name__ == "__main__":

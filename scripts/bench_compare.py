@@ -25,11 +25,23 @@ Regenerate baselines (after an intentional perf change) with::
     PYTHONPATH=src python -m benchmarks.cluster --quick
     python scripts/bench_compare.py --update
 
+Trend gate (``--history``): besides the absolute diff against the seed
+baseline, each CI run appends the guarded metrics of the *current*
+artifacts to a committed trajectory file
+(``benchmarks/baselines/trajectory.jsonl``, one JSON object per run) and
+fails when any guarded metric has degraded **monotonically** across the
+last ``--window`` runs by more than ``--trend-threshold`` in total.  The
+absolute gate catches one bad commit; the trend gate catches death by a
+thousand 3% cuts that each slip under the 25% budget.
+
 Usage: python scripts/bench_compare.py [--threshold 0.25] [--update]
+       python scripts/bench_compare.py --history [--trajectory PATH]
+                                       [--window 4] [--trend-threshold 0.05]
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import shutil
@@ -38,6 +50,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 ARTIFACTS = ("BENCH_scalability.json", "BENCH_cluster.json")
+TRAJECTORY = os.path.join(BASELINE_DIR, "trajectory.jsonl")
 
 #: Top-level sections each artifact must carry; a missing one is reported
 #: by name (nonzero exit) instead of surfacing as a bare KeyError later.
@@ -154,6 +167,117 @@ def compare(name: str, threshold: float) -> list[str]:
     return failures
 
 
+# -- trend gate (--history) ------------------------------------------------
+
+def collect_guarded(artifacts_dir: str = ROOT) -> tuple[dict, dict]:
+    """(values, directions) of every guarded metric in the current
+    artifacts, keyed ``<artifact>:<metric.path>``.  Artifacts that are
+    missing or malformed contribute nothing — a partial CI run appends a
+    partial record rather than failing the append."""
+    values: dict[str, float] = {}
+    directions: dict[str, str] = {}
+    for name in ARTIFACTS:
+        art, err = _load_optional(os.path.join(artifacts_dir, name))
+        if art is None:
+            continue
+        for path, direction in _guards(name, art):
+            v = _dig(art, path)
+            if isinstance(v, (int, float)):
+                key = f"{name}:{path}"
+                values[key] = float(v)
+                directions[key] = direction
+    return values, directions
+
+
+def _load_optional(path: str) -> tuple[dict | None, str | None]:
+    if not os.path.exists(path):
+        return None, None
+    return _load(path)
+
+
+def history_append(trajectory: str = TRAJECTORY,
+                   artifacts_dir: str = ROOT) -> dict | None:
+    """Append one trajectory record built from the current artifacts;
+    returns the record (None when no guarded metric was found)."""
+    values, directions = collect_guarded(artifacts_dir)
+    if not values:
+        return None
+    rec = {
+        "time": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "metrics": values,
+        "directions": directions,
+    }
+    d = os.path.dirname(trajectory)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(trajectory, "a", encoding="utf-8") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec
+
+
+def load_trajectory(trajectory: str = TRAJECTORY) -> list[dict]:
+    if not os.path.exists(trajectory):
+        return []
+    records = []
+    with open(trajectory, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{trajectory}:{i}: malformed trajectory "
+                                 f"line ({e})")
+            if isinstance(rec, dict) and isinstance(rec.get("metrics"), dict):
+                records.append(rec)
+    return records
+
+
+def history_check(trajectory: str = TRAJECTORY, *, window: int = 4,
+                  trend_threshold: float = 0.05) -> list[str]:
+    """Failure strings for monotone-degrading metrics over the last
+    ``window`` trajectory records.
+
+    A metric fails when (a) it is present in every record of the window,
+    (b) *every* consecutive step moves in its bad direction, and (c) the
+    total relative drift across the window exceeds ``trend_threshold``.
+    Fewer than ``window`` records is a pass — the gate needs history.
+    """
+    records = load_trajectory(trajectory)
+    if len(records) < window:
+        print(f"  trend gate: {len(records)}/{window} runs recorded — "
+              "not enough history yet")
+        return []
+    tail = records[-window:]
+    directions = tail[-1].get("directions") or {}
+    failures: list[str] = []
+    keys = set(tail[0]["metrics"])
+    for rec in tail[1:]:
+        keys &= set(rec["metrics"])
+    for key in sorted(keys):
+        series = [rec["metrics"][key] for rec in tail]
+        if not all(isinstance(v, (int, float)) for v in series):
+            continue
+        direction = directions.get(key, "up")
+        sign = 1.0 if direction == "up" else -1.0
+        steps = [sign * (b - a) for a, b in zip(series, series[1:])]
+        monotone = all(s > 0 for s in steps)
+        first = series[0]
+        drift = sign * (series[-1] - first) / abs(first) if first else 0.0
+        marker = "FAIL" if monotone and drift > trend_threshold else "ok"
+        print(f"  [{marker:4s}] trend {key}  "
+              f"{series[0]:.6g} -> {series[-1]:.6g} over {window} runs "
+              f"(drift={drift:+.1%}, monotone={monotone})")
+        if marker == "FAIL":
+            failures.append(
+                f"{key}: degraded monotonically across the last {window} "
+                f"runs ({series[0]:.6g} -> {series[-1]:.6g}, "
+                f"{drift:+.1%} > {trend_threshold:.0%} budget)")
+    return failures
+
+
 def update() -> None:
     os.makedirs(BASELINE_DIR, exist_ok=True)
     for name in ARTIFACTS:
@@ -171,9 +295,37 @@ def main(argv=None) -> int:
                     help="relative regression budget (default 0.25 = 25%%)")
     ap.add_argument("--update", action="store_true",
                     help="copy current artifacts over the baselines")
+    ap.add_argument("--history", action="store_true",
+                    help="append current guarded metrics to the trajectory "
+                         "file and fail on monotone-degrading trends")
+    ap.add_argument("--trajectory", default=TRAJECTORY,
+                    help="trajectory jsonl path (default "
+                         "benchmarks/baselines/trajectory.jsonl)")
+    ap.add_argument("--window", type=int, default=4,
+                    help="trend window in runs (default 4)")
+    ap.add_argument("--trend-threshold", type=float, default=0.05,
+                    help="total relative drift across the window that "
+                         "fails a monotone trend (default 0.05 = 5%%)")
     args = ap.parse_args(argv)
     if args.update:
         update()
+        return 0
+    if args.history:
+        rec = history_append(args.trajectory)
+        if rec is None:
+            print("trend gate: no guarded metrics in current artifacts "
+                  "(nothing appended)")
+        else:
+            print(f"trend gate: appended {len(rec['metrics'])} metrics "
+                  f"to {os.path.relpath(args.trajectory, ROOT)}")
+        failures = history_check(args.trajectory, window=args.window,
+                                 trend_threshold=args.trend_threshold)
+        if failures:
+            print("\nbench-compare trend gate FAILED:", file=sys.stderr)
+            for f in failures:
+                print(f"  {f}", file=sys.stderr)
+            return 1
+        print("\nbench-compare: no monotone-degrading trends")
         return 0
     failures: list[str] = []
     for name in ARTIFACTS:

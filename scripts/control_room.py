@@ -1,0 +1,291 @@
+#!/usr/bin/env python
+"""Render the fleet control room: one self-contained HTML dashboard from
+``results/telemetry/*.jsonl``.
+
+The telemetry pipeline (src/repro/telemetry/) is emitters -> registry ->
+snapshotter -> jsonl; this script is the consumer tier.  It parses every
+snapshotter stream in the telemetry directory, precomputes the panel
+series in Python, and inlines them into a single static HTML file — no
+build step, no external assets, openable from a CI artifact tab.
+
+Panels:
+
+  * **Warm instances per node** — ``sources.cluster.nodes[id]
+    .warm_instances`` summed per node over time: is the prewarm plane
+    keeping pools where the load is?
+  * **Cache tiers** — cumulative WS page-cache hit rate (registry
+    ``ws_cache.hits`` / ``ws_cache.misses``) against the sharded store's
+    L1 ``local_hit_rate``: which tier absorbs restores.
+  * **Restore-stage breakdown** — cumulative mean seconds per pipeline
+    stage (registry ``restore.<stage>_s`` histograms): where a cold start
+    spends its time, over time.
+  * **Forecast vs actual demand** — the demand plane's modeled
+    per-function rates (``sources.cluster.demand.functions``) summed,
+    against the observed fleet completion rate (derivative of the summed
+    router ``completed`` counters).
+
+Usage: python scripts/control_room.py [--telemetry-dir results/telemetry]
+                                      [--out results/telemetry/control_room.html]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import html
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_DIR = os.path.join(ROOT, "results", "telemetry")
+
+RESTORE_STAGES = ("load_vmm", "connect", "ws_fetch", "install",
+                  "materialize")
+
+
+def load_streams(telemetry_dir: str) -> dict[str, list[dict]]:
+    """{stream name: [sample, ...]} for every ``*.jsonl`` in the dir."""
+    streams: dict[str, list[dict]] = {}
+    for path in sorted(glob.glob(os.path.join(telemetry_dir, "*.jsonl"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        samples = []
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue                 # torn tail line: skip
+                if isinstance(rec, dict) and "sources" in rec:
+                    samples.append(rec)
+        if samples:
+            streams[name] = samples
+    return streams
+
+
+def _dig(d, *path):
+    for p in path:
+        if not isinstance(d, dict) or p not in d:
+            return None
+        d = d[p]
+    return d
+
+
+def _num(v):
+    return v if isinstance(v, (int, float)) and not isinstance(v, bool) \
+        else None
+
+
+def build_panels(streams: dict[str, list[dict]]) -> list[dict]:
+    """Panel series from the raw samples.  Each panel: {title, unit,
+    series: [{label, points: [[t, v], ...]}]}."""
+    panels = []
+    for stream, samples in streams.items():
+        t0 = samples[0].get("t", 0.0)
+
+        warm: dict[str, list] = {}
+        ws_rate, l1_rate, demand_fc, demand_actual = [], [], [], []
+        stages: dict[str, list] = {s: [] for s in RESTORE_STAGES}
+        prev_completed = prev_t = None
+        for rec in samples:
+            t = round(rec.get("t", 0.0) - t0, 3)
+            cluster = _dig(rec, "sources", "cluster") or \
+                _dig(rec, "sources", "node")
+            reg = _dig(rec, "sources", "registry") or {}
+
+            nodes = _dig(cluster, "nodes") if cluster else None
+            if nodes is None and cluster and "warm_instances" in cluster:
+                nodes = {cluster.get("node", stream): cluster}
+            completed_total = 0.0
+            have_completed = False
+            for node_id, ns in sorted((nodes or {}).items()):
+                wi = _dig(ns, "warm_instances")
+                if isinstance(wi, dict):
+                    warm.setdefault(node_id, []).append(
+                        [t, sum(v for v in wi.values()
+                                if _num(v) is not None)])
+                c = _num(_dig(ns, "router", "completed"))
+                if c is not None:
+                    completed_total += c
+                    have_completed = True
+
+            hits = _num(_dig(reg, "counters", "ws_cache.hits")) or 0
+            misses = _num(_dig(reg, "counters", "ws_cache.misses")) or 0
+            if hits + misses:
+                ws_rate.append([t, hits / (hits + misses)])
+            lhr = _num(_dig(cluster, "store", "local_hit_rate"))
+            if lhr is not None:
+                l1_rate.append([t, lhr])
+
+            for stage in RESTORE_STAGES:
+                h = _dig(reg, "histograms", f"restore.{stage}_s")
+                if h and _num(h.get("count")):
+                    stages[stage].append([t, h["sum"] / h["count"]])
+
+            fns = _dig(cluster, "demand", "functions")
+            if isinstance(fns, dict):
+                rates = [_num(_dig(f, "rate")) for f in fns.values()]
+                rates = [r for r in rates if r is not None]
+                if rates:
+                    demand_fc.append([t, sum(rates)])
+            if have_completed:
+                if prev_completed is not None and t > prev_t:
+                    d = (completed_total - prev_completed) / (t - prev_t)
+                    if d >= 0:               # counter reset between arms
+                        demand_actual.append([t, d])
+                prev_completed, prev_t = completed_total, t
+
+        if warm:
+            panels.append({
+                "title": f"{stream}: warm instances per node",
+                "unit": "instances",
+                "series": [{"label": nid, "points": pts}
+                           for nid, pts in sorted(warm.items())]})
+        tiers = []
+        if ws_rate:
+            tiers.append({"label": "ws page-cache hit rate",
+                          "points": ws_rate})
+        if l1_rate:
+            tiers.append({"label": "store L1 local hit rate",
+                          "points": l1_rate})
+        if tiers:
+            panels.append({"title": f"{stream}: cache tiers",
+                           "unit": "hit rate", "series": tiers})
+        stage_series = [{"label": s, "points": pts}
+                        for s, pts in stages.items() if pts]
+        if stage_series:
+            panels.append({
+                "title": f"{stream}: restore-stage mean seconds",
+                "unit": "s", "series": stage_series})
+        demand_series = []
+        if demand_fc:
+            demand_series.append({"label": "forecast rate (demand plane)",
+                                  "points": demand_fc})
+        if demand_actual:
+            demand_series.append({"label": "actual completion rate",
+                                  "points": demand_actual})
+        if demand_series:
+            panels.append({
+                "title": f"{stream}: forecast vs actual demand",
+                "unit": "rps", "series": demand_series})
+    return panels
+
+
+_PAGE = """<!doctype html>
+<html><head><meta charset="utf-8"><title>fleet control room</title>
+<style>
+ body {{ font: 13px/1.4 -apple-system, 'Segoe UI', sans-serif;
+        background: #0f1318; color: #d8dee6; margin: 24px; }}
+ h1 {{ font-size: 18px; }} h2 {{ font-size: 14px; margin: 4px 0; }}
+ .meta {{ color: #7a8699; margin-bottom: 16px; }}
+ .grid {{ display: grid; grid-template-columns: repeat(auto-fill,
+          minmax(460px, 1fr)); gap: 18px; }}
+ .panel {{ background: #171d25; border: 1px solid #232c38;
+           border-radius: 8px; padding: 12px; }}
+ svg {{ width: 100%; height: 220px; }}
+ .legend span {{ margin-right: 12px; white-space: nowrap; }}
+ .legend i {{ display: inline-block; width: 10px; height: 10px;
+              border-radius: 2px; margin-right: 4px; }}
+</style></head><body>
+<h1>fleet control room</h1>
+<div class="meta">{meta}</div>
+<div class="grid" id="grid"></div>
+<script>
+const PANELS = {panels_json};
+const COLORS = ["#58a6ff","#3fb950","#d29922","#f85149","#bc8cff",
+                "#39c5cf","#ff7b72","#7ee787","#e3b341","#79c0ff"];
+function chart(panel) {{
+  const W = 460, H = 220, L = 46, B = 24, T = 8, R = 8;
+  let xs = [], ys = [];
+  for (const s of panel.series) for (const [x, y] of s.points) {{
+    xs.push(x); ys.push(y);
+  }}
+  if (!xs.length) return "";
+  const x0 = Math.min(...xs), x1 = Math.max(...xs) || 1;
+  const y0 = Math.min(0, ...ys), y1 = Math.max(...ys) || 1;
+  const sx = x => L + (x - x0) / (x1 - x0 || 1) * (W - L - R);
+  const sy = y => H - B - (y - y0) / (y1 - y0 || 1) * (H - B - T);
+  let out = `<svg viewBox="0 0 ${{W}} ${{H}}">`;
+  for (let i = 0; i <= 4; i++) {{
+    const y = y0 + (y1 - y0) * i / 4, py = sy(y);
+    out += `<line x1="${{L}}" y1="${{py}}" x2="${{W - R}}" y2="${{py}}"
+             stroke="#232c38"/>` +
+           `<text x="${{L - 4}}" y="${{py + 4}}" fill="#7a8699"
+             font-size="10" text-anchor="end">${{y.toPrecision(3)}}</text>`;
+  }}
+  for (let i = 0; i <= 4; i++) {{
+    const x = x0 + (x1 - x0) * i / 4, px = sx(x);
+    out += `<text x="${{px}}" y="${{H - 8}}" fill="#7a8699" font-size="10"
+             text-anchor="middle">${{x.toFixed(1)}}s</text>`;
+  }}
+  panel.series.forEach((s, i) => {{
+    const pts = s.points.map(([x, y]) => `${{sx(x)}},${{sy(y)}}`).join(" ");
+    const c = COLORS[i % COLORS.length];
+    out += s.points.length > 1
+      ? `<polyline points="${{pts}}" fill="none" stroke="${{c}}"
+          stroke-width="1.6"/>`
+      : `<circle cx="${{sx(s.points[0][0])}}" cy="${{sy(s.points[0][1])}}"
+          r="3" fill="${{c}}"/>`;
+  }});
+  return out + "</svg>";
+}}
+const grid = document.getElementById("grid");
+for (const panel of PANELS) {{
+  const div = document.createElement("div");
+  div.className = "panel";
+  const legend = panel.series.map((s, i) =>
+    `<span><i style="background:${{COLORS[i % COLORS.length]}}"></i>` +
+    `${{s.label}}</span>`).join("");
+  div.innerHTML = `<h2>${{panel.title}} <small style="color:#7a8699">` +
+    `(${{panel.unit}})</small></h2>${{chart(panel)}}` +
+    `<div class="legend">${{legend}}</div>`;
+  grid.appendChild(div);
+}}
+if (!PANELS.length)
+  grid.innerHTML = "<div class='panel'>no telemetry samples found</div>";
+</script></body></html>
+"""
+
+
+def render(streams: dict[str, list[dict]], out_path: str) -> int:
+    panels = build_panels(streams)
+    n = sum(len(s) for s in streams.values())
+    meta = (f"{len(streams)} stream(s), {n} sample(s), "
+            f"{len(panels)} panel(s) — "
+            + ", ".join(f"{k} ({len(v)})" for k, v in streams.items()))
+    page = _PAGE.format(meta=html.escape(meta),
+                        panels_json=json.dumps(panels))
+    d = os.path.dirname(out_path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(out_path, "w", encoding="utf-8") as f:
+        f.write(page)
+    print(f"control room: {len(panels)} panel(s) from {n} sample(s) "
+          f"-> {out_path}")
+    return len(panels)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--telemetry-dir", default=DEFAULT_DIR)
+    ap.add_argument("--out", default=None,
+                    help="output html (default <telemetry-dir>/"
+                         "control_room.html)")
+    args = ap.parse_args(argv)
+    out = args.out or os.path.join(args.telemetry_dir, "control_room.html")
+    streams = load_streams(args.telemetry_dir)
+    if not streams:
+        print(f"control_room: no *.jsonl under {args.telemetry_dir} — "
+              "run a quick cluster benchmark first "
+              "(PYTHONPATH=src python -m benchmarks.cluster --quick)",
+              file=sys.stderr)
+        render({}, out)                      # still emit an empty shell
+        return 0
+    render(streams, out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

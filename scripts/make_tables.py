@@ -1,33 +1,52 @@
-"""Generate the §Dry-run / §Roofline markdown tables from results/dryrun."""
+"""Generate markdown tables from results artifacts.
+
+Modes (``python scripts/make_tables.py [mode]``):
+
+  * ``dryrun`` / ``roofline`` / ``coll`` — the §Dry-run / §Roofline tables
+    from ``results/dryrun/*.json`` (the accelerator dry-run sweep).
+  * ``bench`` — render the quick-benchmark artifacts
+    (``BENCH_scalability.json`` / ``BENCH_cluster.json``): Fig. 9 rows,
+    the burst / overlap A/Bs with their PR-6 ``stage_seconds`` breakdown,
+    and the provisioning-policy A/B.
+  * ``all`` (default) — dryrun + roofline + coll.
+
+Every artifact key is fetched through :func:`req`, which raises a
+``SystemExit`` *naming the missing key and the file it was missing from*.
+A silently blank cell in a committed table is a schema drift bug that
+nobody notices for three PRs; a named error at generation time is fixed in
+one.
+"""
 import json
 import os
 import sys
 
-DRY = "/root/repo/results/dryrun"
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "results", "dryrun")
 ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCHS = ["qwen1.5-110b", "qwen2-7b", "mistral-nemo-12b", "olmo-1b",
          "zamba2-1.2b", "deepseek-moe-16b", "llama4-maverick-400b-a17b",
          "seamless-m4t-medium", "pixtral-12b", "rwkv6-7b"]
 
 
+def req(d, path, *, src):
+    """Fetch ``a.b.c`` from nested dicts; exit naming the key on a miss."""
+    node = d
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise SystemExit(
+                f"make_tables: required key {path!r} missing from {src} "
+                f"(stopped at {part!r}) — artifact schema drifted; "
+                "regenerate the artifact or update this table")
+        node = node[part]
+    return node
+
+
 def cell(arch, shape, mesh):
     fn = os.path.join(DRY, f"{arch}__{shape}__{mesh}.json")
     if not os.path.exists(fn):
-        return None
+        return None, fn
     with open(fn) as f:
-        return json.load(f)
-
-
-def fmt(c):
-    if c is None:
-        return "—"
-    if c["status"] == "skipped":
-        return "skip"
-    if c["status"] != "ok":
-        return "ERR"
-    r = c["roofline"]
-    return (f"{r['compute_s']:.2f}/{r['memory_s']:.2f}/{r['collective_s']:.2f}s "
-            f"**{r['bottleneck'][:4]}** f={r['roofline_fraction']:.3f}")
+        return json.load(f), fn
 
 
 def dryrun_table(mesh):
@@ -36,19 +55,20 @@ def dryrun_table(mesh):
     print("|---|---|---|---|---|---|---|")
     for a in ARCHS:
         for s in ORDER:
-            c = cell(a, s, mesh)
+            c, fn = cell(a, s, mesh)
             if c is None:
                 continue
-            if c["status"] == "skipped":
+            status = req(c, "status", src=fn)
+            if status == "skipped":
                 print(f"| {a} | {s} | skipped (full attention @500k) | — | — | — | — |")
                 continue
-            if c["status"] != "ok":
+            if status != "ok":
                 print(f"| {a} | {s} | **ERROR** | — | — | — | — |")
                 continue
-            mb = c.get("meta", {}).get("microbatches", "—")
-            print(f"| {a} | {s} | ok | {c['peak_bytes_per_device']/1e9:.2f} | "
-                  f"{'yes' if c['fits_hbm'] else 'no'} | {mb} | "
-                  f"{c['lower_s']+c['compile_s']:.0f} |")
+            mb = req(c, "meta.microbatches", src=fn)
+            print(f"| {a} | {s} | ok | {req(c, 'peak_bytes_per_device', src=fn)/1e9:.2f} | "
+                  f"{'yes' if req(c, 'fits_hbm', src=fn) else 'no'} | {mb} | "
+                  f"{req(c, 'lower_s', src=fn)+req(c, 'compile_s', src=fn):.0f} |")
 
 
 def roofline_table(mesh):
@@ -58,14 +78,17 @@ def roofline_table(mesh):
     print("|---|---|---|---|---|---|---|---|---|")
     for a in ARCHS:
         for s in ORDER:
-            c = cell(a, s, mesh)
-            if c is None or c["status"] != "ok":
+            c, fn = cell(a, s, mesh)
+            if c is None or c.get("status") != "ok":
                 continue
-            r = c["roofline"]
-            print(f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
-                  f"{r['collective_s']:.3f} | {r['bottleneck']} | "
-                  f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.3f} | "
-                  f"{r['roofline_fraction']:.4f} |")
+            r = req(c, "roofline", src=fn)
+            print(f"| {a} | {s} | {req(r, 'compute_s', src=fn):.3f} | "
+                  f"{req(r, 'memory_s', src=fn):.3f} | "
+                  f"{req(r, 'collective_s', src=fn):.3f} | "
+                  f"{req(r, 'bottleneck', src=fn)} | "
+                  f"{req(r, 'model_flops', src=fn):.2e} | "
+                  f"{req(r, 'useful_flops_ratio', src=fn):.3f} | "
+                  f"{req(r, 'roofline_fraction', src=fn):.4f} |")
 
 
 def coll_detail(mesh):
@@ -74,14 +97,117 @@ def coll_detail(mesh):
     print("|---|---|---|---|---|---|---|")
     for a in ARCHS:
         for s in ORDER:
-            c = cell(a, s, mesh)
-            if c is None or c["status"] != "ok":
+            c, fn = cell(a, s, mesh)
+            if c is None or c.get("status") != "ok":
                 continue
-            b = c["collectives"]["bytes"]
+            b = req(c, "collectives.bytes", src=fn)
             f = lambda k: f"{b.get(k,0)/1e9:.2f}G"
             print(f"| {a} | {s} | {f('all-gather')} | {f('all-reduce')} | "
                   f"{f('reduce-scatter')} | {f('all-to-all')} | "
                   f"{f('collective-permute')} |")
+
+
+# -- bench mode: BENCH_*.json quick-benchmark artifacts --------------------
+
+#: The PR-6 per-stage seconds schema (``summarize()['stage_seconds']``).
+STAGE_KEYS = ("load_vmm_s", "connection_s", "ws_fetch_s", "install_s",
+              "materialize_s", "tail_wait_s")
+
+
+def _load_artifact(name):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None, path
+    with open(path) as f:
+        return json.load(f), path
+
+
+def bench_scalability():
+    art, src = _load_artifact("BENCH_scalability.json")
+    if art is None:
+        print(f"\n(no {os.path.basename(src)} — run "
+              "`PYTHONPATH=src python -m benchmarks.scalability --quick`)")
+        return
+    print("\n### Fig. 9 — cold-start latency vs concurrency\n")
+    print("| label | us/call | derived |")
+    print("|---|---|---|")
+    for row in req(art, "fig9", src=src):
+        print(f"| {req(row, 'label', src=src)} | "
+              f"{req(row, 'us_per_call', src=src):.0f} | "
+              f"{req(row, 'derived', src=src)} |")
+
+    print("\n### Burst-restore A/B — batched vs unbatched group cold starts\n")
+    print("| depth | arm | ws_reads | ws_waits | install mean (ms) | "
+          "cold e2e p95 (ms) | wall (ms) |")
+    print("|---|---|---|---|---|---|---|")
+    for depth, arms in sorted(req(art, "burst_ab", src=src).items()):
+        for arm in ("unbatched", "batched"):
+            o = req(arms, arm, src=f"{src}:burst_ab.{depth}")
+            print(f"| {depth} | {arm} | {req(o, 'ws_reads', src=src)} | "
+                  f"{req(o, 'ws_waits', src=src)} | "
+                  f"{req(o, 'install_mean_s', src=src)*1e3:.2f} | "
+                  f"{req(o, 'cold_e2e_p95_s', src=src)*1e3:.1f} | "
+                  f"{req(o, 'wall_s', src=src)*1e3:.1f} |")
+
+    print("\n### Overlapped-restore A/B — per-stage seconds (PR-6 schema)\n")
+    header = "| arm | restore p95 (ms) | ttfr wall (ms) | " + \
+        " | ".join(k[:-2] for k in STAGE_KEYS) + " |"
+    print(header)
+    print("|---" * (3 + len(STAGE_KEYS)) + "|")
+    overlap = req(art, "overlap_ab", src=src)
+    for arm in ("resident", "overlap"):
+        o = req(overlap, arm, src=f"{src}:overlap_ab")
+        stages = req(o, "stage_seconds", src=f"{src}:overlap_ab.{arm}")
+        cells = " | ".join(
+            f"{req(stages, k, src=f'{src}:overlap_ab.{arm}.stage_seconds')*1e3:.2f}"
+            for k in STAGE_KEYS)
+        print(f"| {arm} | {req(o, 'cold_restore_p95_s', src=src)*1e3:.1f} | "
+              f"{req(o, 'ttfr_wall_s', src=src)*1e3:.1f} | {cells} |")
+
+    print("\n### Provisioning-policy A/B\n")
+    print("| trace | arm | cold fraction | prewarmed | e2e p95 (ms) | "
+          "ws cache hit rate |")
+    print("|---|---|---|---|---|---|")
+    for tname, arms in sorted(req(art, "policy_ab", src=src).items()):
+        for arm, o in sorted(arms.items()):
+            print(f"| {tname} | {arm} | "
+                  f"{req(o, 'cold_fraction', src=src):.3f} | "
+                  f"{req(o, 'prewarmed_served', src=src)} | "
+                  f"{req(o, 'e2e_p95_s', src=src)*1e3:.1f} | "
+                  f"{req(o, 'ws_cache_hit_rate', src=src):.3f} |")
+
+
+def bench_cluster():
+    art, src = _load_artifact("BENCH_cluster.json")
+    if art is None:
+        print(f"\n(no {os.path.basename(src)} — run "
+              "`PYTHONPATH=src python -m benchmarks.cluster --quick`)")
+        return
+    print("\n### Cluster placement A/B\n")
+    print("| trace | arm | cold p95 (ms) | local hit rate |")
+    print("|---|---|---|---|")
+
+    def walk(d, prefix):
+        if not isinstance(d, dict):
+            return
+        if "cold_p95_s" in d or "local_hit_rate" in d:
+            cold = d.get("cold_p95_s")
+            lhr = d.get("local_hit_rate")
+            trace, _, arm = prefix.rpartition(".")
+            cold_cell = f"{cold*1e3:.1f}" if cold is not None else "—"
+            lhr_cell = f"{lhr:.3f}" if lhr is not None else "—"
+            print(f"| {trace or '—'} | {arm} | {cold_cell} | {lhr_cell} |")
+            return
+        for k, v in sorted(d.items()):
+            walk(v, f"{prefix}.{k}" if prefix else k)
+
+    for section in ("placement_ab", "demand_plane"):
+        walk(req(art, section, src=src), section)
+
+
+def bench_tables():
+    bench_scalability()
+    bench_cluster()
 
 
 if __name__ == "__main__":
@@ -93,3 +219,5 @@ if __name__ == "__main__":
         roofline_table("single")
     if which in ("all", "coll"):
         coll_detail("single")
+    if which == "bench":
+        bench_tables()

@@ -22,6 +22,12 @@ REP004  every module that spawns a ``threading.Thread`` must contain a
 REP005  the seven ``StageTimings`` stage fields are written only through a
         ``timings``/``stages`` receiver (PR 6's source-of-truth contract);
         flat writes like ``report.install_s = ...`` are flagged.
+REP006  telemetry emission goes through ``MetricsRegistry``: a *new*
+        ``stats()``-style method building an ad-hoc stats dict in the
+        clock-injectable scope (``serving/``, ``cluster/``,
+        ``core/restore.py``) is flagged unless it is one of the documented
+        snapshotter surfaces (telemetry/schema.py) listed in
+        ``REP006_STATS_SURFACES``.
 """
 from __future__ import annotations
 
@@ -55,6 +61,24 @@ STAGE_RECEIVERS = {"timings", "stages", "t"}
 WS_CACHE_PRIVATE = {"_entries", "_inflight", "_gens", "_order", "_lock",
                     "_bytes", "_listeners"}
 
+# REP006: the documented stats()/snapshotter surfaces (telemetry/schema.py).
+# Anything else named like a stats emitter that builds a dict literal in
+# the clock-injectable scope should be a MetricsRegistry emission instead.
+REP006_STATS_SURFACES = {
+    ("serving/router.py", "Router.stats"),
+    ("serving/orchestrator.py", "Orchestrator.tail_stats"),
+    ("serving/policy.py", "PrewarmPolicy.stats"),
+    ("cluster/node.py", "WorkerNode.stats"),
+    ("cluster/scheduler.py", "ClusterRouter.stats"),
+    ("cluster/demand.py", "DemandAggregator.stats"),
+    ("cluster/snapstore.py", "ShardedSnapshotStore.stats"),
+}
+
+
+def _stats_like(name: str) -> bool:
+    return (name in ("stats", "metrics")
+            or name.endswith("_stats") or name.endswith("_metrics"))
+
 
 def _in_rep001_scope(rel: str) -> bool:
     return rel.startswith(REP001_SCOPES) or rel in REP001_FILES
@@ -78,11 +102,44 @@ class _Linter(ast.NodeVisitor):
         self.stack.pop()
 
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_rep006(node)
         self.stack.append(node.name)
         self.generic_visit(node)
         self.stack.pop()
 
     visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- REP006 -----------------------------------------------------------
+
+    def _check_rep006(self, node: ast.FunctionDef) -> None:
+        """Flag a new stats-emitting method building an ad-hoc dict in the
+        clock-injectable scope: telemetry belongs in MetricsRegistry, and
+        snapshotter surfaces belong in the documented schema."""
+        if not _in_rep001_scope(self.rel) or not _stats_like(node.name):
+            return
+        qual = ".".join([*self.stack, node.name])
+        if (self.rel, qual) in REP006_STATS_SURFACES:
+            return
+        if not self._builds_stats_dict(node):
+            return
+        self.findings.append(Finding(
+            rule="REP006", path=self.rel, line=node.lineno, symbol=qual,
+            message=("new ad-hoc stats dict surface; emit through "
+                     "MetricsRegistry (repro.telemetry) or add the surface "
+                     "to the documented snapshotter schema "
+                     "(telemetry/schema.py + REP006_STATS_SURFACES)"),
+            detail=f"adhoc-stats:{node.name}"))
+
+    @staticmethod
+    def _builds_stats_dict(node: ast.FunctionDef) -> bool:
+        """True when the function both returns something and contains a
+        multi-key dict literal (covers ``return {...}`` and the
+        ``out = {...}; ...; return out`` shape alike)."""
+        has_return = any(isinstance(n, ast.Return) and n.value is not None
+                         for n in ast.walk(node))
+        has_dict = any(isinstance(n, ast.Dict) and len(n.keys) >= 2
+                       for n in ast.walk(node))
+        return has_return and has_dict
 
     # -- REP001 -----------------------------------------------------------
 
@@ -235,7 +292,7 @@ def _module_rep004(rel: str, tree: ast.Module, src: str) -> list[Finding]:
 
 
 def analyze_lint(root: str) -> list[Finding]:
-    """Run REP001–REP005 over every ``.py`` under ``root``."""
+    """Run REP001–REP006 over every ``.py`` under ``root``."""
     findings: list[Finding] = []
     for dirpath, _dirnames, filenames in os.walk(root):
         for fn in sorted(filenames):

@@ -176,6 +176,37 @@ class DemandAggregator:
             for name in list(self.pushed):
                 self._clear(name)
 
+    # -- forecast persistence -------------------------------------------
+
+    def export_profiles(self, now: float | None = None) -> dict[str, dict]:
+        """Serializable periodicity profiles for every function whose
+        detector has (or inherited) a confident period — what
+        ``ClusterRouter.close`` writes alongside the snapshot store."""
+        with self._mu:
+            now = self.clock() if now is None else now
+            out = {}
+            for name, d in self.demand.items():
+                state = d.export_state(now)
+                if state is not None:
+                    out[name] = state
+            return out
+
+    def seed_profiles(self, profiles: dict[str, dict]) -> int:
+        """Install persisted profiles (``build_fleet`` reload path):
+        creates a pre-seeded :class:`ForecastDemand` per function so the
+        next control step prewarms day-one ramps before any arrival.
+        Returns how many profiles were accepted."""
+        n = 0
+        with self._mu:
+            for name, state in profiles.items():
+                d = self.demand.get(name)
+                if d is None:
+                    d = self.demand[name] = ForecastDemand(
+                        self._pcfg, self._fcfg, clock=self.clock)
+                if d.seed_state(state):
+                    n += 1
+        return n
+
     # -- lifecycle ------------------------------------------------------
 
     def start(self) -> "DemandAggregator":

@@ -27,6 +27,7 @@ from ..configs.base import ModelConfig
 from ..core.reap import WSCache
 from ..serving import (Orchestrator, PrewarmPolicy, Router, RouterConfig,
                        ServeConfig)
+from ..telemetry import StatsSnapshotter
 
 #: Node-flavoured data-plane defaults (smaller than the single-host
 #: RouterConfig: a fleet host shares the machine with its peers).
@@ -79,6 +80,18 @@ class WorkerNode:
         self.policy = (PrewarmPolicy(self.orch, self.router,
                                      config.policy).start()
                        if config.policy is not None else None)
+        # optional per-node time series (the fleet-level snapshotter in
+        # build_fleet already nests every node's stats; this one is for
+        # standalone nodes or per-node files)
+        tcfg = config.telemetry
+        self.snapshotter = None
+        if tcfg is not None and getattr(tcfg, "per_node", False):
+            path = (os.path.join(tcfg.out_dir, f"{node_id}.jsonl")
+                    if tcfg.out_dir else None)
+            self.snapshotter = StatsSnapshotter(
+                interval_s=tcfg.interval_s, path=path, ring=tcfg.ring)
+            self.snapshotter.add_source("node", self.stats)
+            self.snapshotter.start()
         self._mu = threading.Lock()
         self.alive = True
 
@@ -125,6 +138,8 @@ class WorkerNode:
             if not self.alive:
                 return
             self.alive = False
+        if self.snapshotter is not None:
+            self.snapshotter.stop()   # crash: no final sample, no drain
         self.router.close(drain=False)
         if self.policy is not None:
             self.policy.stop()
@@ -139,6 +154,8 @@ class WorkerNode:
         if self.policy is not None:
             self.policy.stop()
         self.router.close(drain=True)
+        if self.snapshotter is not None:
+            self.snapshotter.close()  # final sample while stats still live
         self.orch.close()
 
     # -- fleet demand plane ----------------------------------------------
@@ -189,6 +206,7 @@ class WorkerNode:
             "alive": self.alive,
             "capacity": self.capacity,
             "load": self.load() if self.alive else 0,
+            "warm_instances": self.orch.warm_counts(),
             "router": self.router.stats(),
         }
         out["stage_seconds"] = self.orch.stage_seconds()

@@ -30,6 +30,7 @@ shard tier is warm before traffic hits the new mapping.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import random
 import threading
@@ -37,6 +38,7 @@ import time
 
 from ..configs.base import ModelConfig
 from ..serving import AdmissionError, RouterClosedError
+from ..telemetry import TELEMETRY, StatsSnapshotter
 from .demand import DemandAggregator, DemandConfig
 from .node import NodeDownError, WorkerNode
 from .snapstore import ShardedSnapshotStore
@@ -160,6 +162,9 @@ class ClusterRouter:
         self.placements: dict[str, int] = {}
         self.demand_plane = (DemandAggregator(self, demand)
                              if demand is not None else None)
+        #: fleet-level StatsSnapshotter (wired by build_fleet when the
+        #: ServeConfig carries a TelemetryConfig); closed first in close()
+        self.telemetry = None
         for n in nodes:
             self.add_node(n, rebalance=False)
         if self.demand_plane is not None:
@@ -272,12 +277,37 @@ class ClusterRouter:
             node.router.drain(left)
 
     def close(self) -> None:
+        if self.telemetry is not None:
+            self.telemetry.close()       # final sample while nodes are live
+        self._save_forecasts()           # persist before the plane stops
         if self.demand_plane is not None:
             self.demand_plane.stop()
         for node in self.alive_nodes():
             node.close()
         if self.store is not None:
             self.store.close()           # detach the invalidation broadcast
+
+    FORECAST_STATE = "forecast_profiles.json"
+
+    def _save_forecasts(self) -> None:
+        """Serialize every confident periodicity profile alongside the
+        snapshot store so the next fleet build prewarms day-one ramps
+        (:func:`build_fleet` reloads the file into its demand plane)."""
+        if self.demand_plane is None:
+            return
+        profiles = self.demand_plane.export_profiles()
+        if not profiles:
+            return
+        dirs = {n.orch.store_dir for n in self.nodes.values()}
+        payload = json.dumps({"version": 1, "profiles": profiles},
+                             sort_keys=True)
+        for d in sorted(dirs):
+            try:
+                with open(os.path.join(d, self.FORECAST_STATE), "w",
+                          encoding="utf-8") as fh:
+                    fh.write(payload)
+            except OSError:
+                continue                 # store dir gone: nothing to persist
 
     def __enter__(self) -> "ClusterRouter":
         return self
@@ -481,4 +511,27 @@ def build_fleet(n_nodes: int, store_dir: str, *,
     nodes = [WorkerNode(f"node-{i}", store_dir, config,
                         ws_cache=store.attach(f"node-{i}"), **node_kw)
              for i in range(n_nodes)]
-    return ClusterRouter(nodes, store=store, cfg=cfg, demand=demand)
+    cluster = ClusterRouter(nodes, store=store, cfg=cfg, demand=demand)
+    # restart path: reload persisted periodicity profiles so the demand
+    # plane prewarms known ramps before re-learning them from arrivals
+    if cluster.demand_plane is not None:
+        state = os.path.join(store_dir, ClusterRouter.FORECAST_STATE)
+        try:
+            with open(state, encoding="utf-8") as fh:
+                payload = json.load(fh)
+            cluster.demand_plane.seed_profiles(payload.get("profiles", {}))
+        except (OSError, ValueError):
+            pass                         # no prior state (or unreadable)
+    # fleet-level time series: one snapshotter over the nested cluster
+    # stats (per-node warm counts / cache tiers / stage breakdowns / demand
+    # forecasts) plus the process registry's counters and histograms
+    tcfg = config.telemetry if config is not None else None
+    if tcfg is not None:
+        path = (os.path.join(tcfg.out_dir, "fleet.jsonl")
+                if tcfg.out_dir else None)
+        snap = StatsSnapshotter(interval_s=tcfg.interval_s, path=path,
+                                ring=tcfg.ring)
+        snap.add_source("cluster", cluster.stats)
+        snap.add_source("registry", TELEMETRY.collect)
+        cluster.telemetry = snap.start()
+    return cluster

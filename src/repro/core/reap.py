@@ -38,6 +38,7 @@ import time
 import numpy as np
 
 from .arena import PAGE, GuestMemoryFile, InstanceArena, PageSource
+from ..telemetry import TELEMETRY
 
 
 @dataclasses.dataclass
@@ -376,6 +377,7 @@ class WSCache:
             _, _, data = self._entries.pop(victim)
             self._bytes -= len(data)
             self.evicted += 1
+            TELEMETRY.inc("ws_cache.evicted")
 
     def _call_source(self, base: str, cfg: ReapConfig, group: int):
         """Invoke the miss resolver, passing ``group`` through when the
@@ -413,6 +415,7 @@ class WSCache:
                 if ent is not None and ent[0] == mtime:
                     self.hits += 1
                     self._lru_touch(base)
+                    TELEMETRY.inc("ws_cache.hits")
                     return ent[1], ent[2], True
                 ev = self._inflight.get(base)
                 if ev is None:
@@ -420,6 +423,7 @@ class WSCache:
                     ev = threading.Event()
                     self._inflight[base] = ev
                     self.misses += 1
+                    TELEMETRY.inc("ws_cache.misses")
                     gen = self._gens.get(base, 0)
                     break
             # follower: wait for the leader's read, then re-check the entry
@@ -479,6 +483,7 @@ class WSCache:
                 # and folding it into hits would inflate this node's local
                 # hit rate
                 self.peek_hits += 1
+                TELEMETRY.inc("ws_cache.peek_hits")
             self._lru_touch(base)
             return ent[1], ent[2]
 
@@ -496,6 +501,7 @@ class WSCache:
             if dropped is not None:
                 self._bytes -= len(dropped[2])
                 self.invalidations += 1
+                TELEMETRY.inc("ws_cache.invalidations")
             if base in self._order:
                 self._order.remove(base)
             return dropped is not None

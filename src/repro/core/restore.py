@@ -38,6 +38,7 @@ import numpy as np
 from .arena import PAGE, GuestMemoryFile, InstanceArena
 from .reap import (WS_CACHE, Monitor, ReapConfig, StageTimings, _read_ws,
                    _read_ws_prefix, read_hot_prefix, trace_path)
+from ..telemetry import TELEMETRY
 
 __all__ = [
     "STAGES", "StageTimings", "TailInstall", "RestorePipeline",
@@ -102,7 +103,7 @@ class TailInstall:
 
     def __init__(self, arena: InstanceArena, pages, block=None, *,
                  fetch=None, deadline_s: float = 5.0, workers: int = 2,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, registry=None):
         if block is None and fetch is None:
             raise ValueError("TailInstall needs a block or a fetch")
         self.arena = arena
@@ -113,9 +114,11 @@ class TailInstall:
         self.deadline_s = deadline_s
         self.demoted = False
         self.clock = clock
+        self.registry = TELEMETRY if registry is None else registry
         self.done_at: float | None = None   # clock() at full residency
         self.t0 = clock()
         self._cancel = threading.Event()
+        self.registry.inc("tail.started")
         arena.begin_pending(self.pages)
         self._future = _tail_pool(workers).submit(self._run)
 
@@ -124,29 +127,36 @@ class TailInstall:
             if self.block is None:
                 if self._cancel.is_set():
                     self.arena.cancel_pending(self.pages, demote=False)
+                    self.registry.inc("tail.cancelled")
                     return
                 if self.clock() - self.t0 > self.deadline_s:
                     self.arena.cancel_pending(self.pages, demote=True)
                     self.demoted = True
+                    self.registry.inc("tail.demoted")
                     return
                 t0 = self.clock()
                 self.block = self.fetch()
                 self.fetch_s = self.clock() - t0
+                self.registry.observe("tail.fetch_s", self.fetch_s)
             n = len(self.pages)
             for i in range(0, n, self.CHUNK_PAGES):
                 if self._cancel.is_set():
                     self.arena.cancel_pending(self.pages[i:], demote=False)
+                    self.registry.inc("tail.cancelled")
                     return
                 if self.clock() - self.t0 > self.deadline_s:
                     # straggler: demote the rest to the disk-fault path
                     self.arena.cancel_pending(self.pages[i:], demote=True)
                     self.demoted = True
+                    self.registry.inc("tail.demoted")
                     return
                 if TailInstall.throttle is not None:
                     TailInstall.throttle(self, i)
                 j = i + self.CHUNK_PAGES
                 self.arena.install_pending(self.pages[i:j], self.block[i:j])
             self.done_at = self.clock()
+            self.registry.inc("tail.completed")
+            self.registry.observe("tail.resident_s", self.done_at - self.t0)
         except BaseException:
             # never leave waiters parked on pages nobody will install
             self.arena.cancel_pending(self.pages)
@@ -251,7 +261,8 @@ class RestorePipeline:
 
     def __init__(self, base: str, reap: ReapConfig | None = None, *,
                  mode: str | None = None, cache=None, exec_restore=None,
-                 connector=connect_handshake, clock=time.perf_counter):
+                 connector=connect_handshake, clock=time.perf_counter,
+                 registry=None):
         self.base = base
         self.reap = reap or ReapConfig()
         self.mode = mode                 # None => auto; 'vanilla' => no REAP
@@ -259,6 +270,8 @@ class RestorePipeline:
         self.exec_restore = exec_restore
         self.connector = connector
         self.clock = clock
+        self.registry = TELEMETRY if registry is None else registry
+        self._trace = self.registry.trace("cold_start", base=base)
         self.timings = StageTimings()
         self.gm: GuestMemoryFile | None = None
         self.monitor: Monitor | None = None
@@ -268,6 +281,14 @@ class RestorePipeline:
         #: the tail's bytes then come from ``_tail_fetch`` in the background.
         self._split_k: int | None = None
         self._tail_fetch = None          # () -> (pages, data) full WS
+
+    def _span(self, stage: str, t0: float, dur_s: float, **attrs) -> None:
+        """Record one stage span in the cold-start trace.  ``dur_s`` is
+        always the value just written to ``self.timings`` — StageTimings
+        stays the single stage-seconds sink (REP005); the trace only
+        mirrors it for per-invocation attribution."""
+        self._trace.add(stage, t0, dur_s, **attrs)
+        self.registry.observe(f"restore.{stage}_s", dur_s)
 
     # -- stages ---------------------------------------------------------
 
@@ -286,11 +307,13 @@ class RestorePipeline:
         if self.exec_restore is not None:
             self.exec_restore()
         self.timings.load_vmm_s = self.clock() - t0
+        self._span("load_vmm", t0, self.timings.load_vmm_s)
 
     def connect(self) -> None:
         t0 = self.clock()
         self.connector()
         self.timings.connection_s = self.clock() - t0
+        self._span("connect", t0, self.timings.connection_s)
 
     def ws_fetch(self, group: int = 1):
         """Fetch the working set (REAP prefetch phase, read half).
@@ -329,6 +352,7 @@ class RestorePipeline:
             mon.mode = "record"          # record dropped under us: re-record
             return None
         self.timings.ws_fetch_s = self.clock() - t0
+        self._span("ws_fetch", t0, self.timings.ws_fetch_s, cache_hit=hit)
         return pages, data, hit
 
     def _split_fetch(self, group: int):
@@ -395,7 +419,8 @@ class RestorePipeline:
         self.tail = TailInstall(
             self.monitor.arena, pages, block, fetch=fetch,
             deadline_s=self.reap.tail_deadline_s,
-            workers=self.reap.tail_workers, clock=self.clock)
+            workers=self.reap.tail_workers, clock=self.clock,
+            registry=self.registry)
 
     def install(self, fetched) -> None:
         """Single-instance eager install (per-page ``install_span`` path).
@@ -420,6 +445,8 @@ class RestorePipeline:
                 pages[:k], memoryview(data)[:k * PAGE])
             if k < len(pages):
                 self.timings.install_s = self.clock() - t0
+                self._span("install", t0, self.timings.install_s,
+                           hot_pages=k, total_pages=len(pages))
                 self._mark_prefetched(len(pages), hit)
                 if self._tail_fetch is not None:
                     # split fetch: the tail's bytes arrive in the background
@@ -432,6 +459,8 @@ class RestorePipeline:
                     self._start_tail(pages[k:], tail_block)
                 return
         self.timings.install_s = self.clock() - t0
+        self._span("install", t0, self.timings.install_s,
+                   total_pages=len(pages))
         self._mark_prefetched(len(pages), hit)
 
     def install_block(self, sorted_pages: np.ndarray, block: np.ndarray,
@@ -451,6 +480,10 @@ class RestorePipeline:
         self.monitor.arena.install_block(sorted_pages, block)
         self.timings.install_s = self.clock() - t0
         self.timings.ws_fetch_s = ws_fetch_s
+        self._span("ws_fetch", t0, self.timings.ws_fetch_s,
+                   cache_hit=hit, group_share=True)
+        self._span("install", t0, self.timings.install_s,
+                   batched=True, total_pages=len(sorted_pages))
         n_total = len(sorted_pages)
         if tail is not None and len(tail[0]):
             n_total += len(tail[0])
@@ -462,6 +495,8 @@ class RestorePipeline:
         t0 = self.clock()
         fn()
         self.timings.materialize_s = self.clock() - t0
+        self._span("materialize", t0, self.timings.materialize_s)
+        self._trace.finish()             # materialize ends the cold start
 
     def _mark_prefetched(self, n_pages: int, hit: bool) -> None:
         # keep the monitor's view consistent so finish() computes the

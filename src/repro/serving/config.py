@@ -48,6 +48,10 @@ class ServeConfig:
     policy: Optional[Any] = None     # serving.PolicyConfig (prewarm loop)
     demand: Optional[Any] = None     # cluster.DemandConfig (fleet forecasts)
     transfer: Optional[Any] = None   # cluster.TransferModel (shard network)
+    # -- observability ---------------------------------------------------
+    # telemetry.TelemetryConfig: enables the periodic StatsSnapshotter
+    # (fleet-wide via build_fleet; per-node too with ``per_node=True``)
+    telemetry: Optional[Any] = None
 
     def resolved_reap(self) -> ReapConfig:
         """The effective ReapConfig: ``reap`` with the overlap knobs

@@ -72,9 +72,57 @@ class PeriodicityDetector:
         self.arrivals: deque[float] = deque(maxlen=self.cfg.max_arrivals)
         self._cache_key: tuple | None = None
         self._cache: tuple[float, float] | None = None
+        # persisted prior (seed): a profile exported by a previous run.
+        # It answers detect()/profile() until fresh history can — a
+        # restarted fleet prewarms day-one ramps instead of re-learning.
+        self._seed: dict | None = None
 
     def observe(self, timestamps: list[float]) -> None:
         self.arrivals.extend(timestamps)
+
+    # -- persistence (ROADMAP: cross-restart forecast profiles) ---------
+
+    def to_state(self, now: float | None = None) -> dict | None:
+        """Serializable profile state, or None when nothing confident is
+        known.  Phase is anchored at t=0 of the detector's clock domain
+        (exactly the convention ``profile``/``forecast_rate`` fold with),
+        so reloading is valid whenever the restarted process shares the
+        clock epoch — ``time.monotonic`` on the same boot, or a fake clock
+        continuing the same timeline in tests.  Falls back to carrying an
+        unreplaced seed forward, so back-to-back restarts don't lose it."""
+        now = self.clock() if now is None else now
+        det = self.detect(now)
+        if det is not None:
+            period_s, conf = det
+            prof = self.profile(now, period_s)
+            if prof is not None and len(prof) and float(prof.max()) > 0:
+                return {"period_s": float(period_s),
+                        "confidence": float(conf),
+                        "bin_s": float(self.cfg.bin_s),
+                        "rates": [float(r) for r in prof]}
+        return dict(self._seed) if self._seed is not None else None
+
+    def seed(self, state: dict | None) -> bool:
+        """Install a persisted profile as the prior; returns False (and
+        ignores it) when the state is empty or was folded at a different
+        bin width than this detector's (phase indices wouldn't line up)."""
+        if (not state or not state.get("rates")
+                or "period_s" not in state
+                or abs(float(state.get("bin_s", self.cfg.bin_s))
+                       - self.cfg.bin_s) > 1e-9):
+            return False
+        self._seed = dict(state)
+        return True
+
+    @property
+    def seeded(self) -> bool:
+        return self._seed is not None
+
+    def _seed_detect(self) -> tuple[float, float] | None:
+        s = self._seed
+        if s is None:
+            return None
+        return float(s["period_s"]), float(s["confidence"])
 
     def span(self) -> float:
         """Seconds of history currently held."""
@@ -123,13 +171,15 @@ class PeriodicityDetector:
             if (len(self.arrivals) >= 4
                     and self.span() >= c.period_hint_s):
                 return c.period_hint_s, 1.0
-            return None
+            return self._seed_detect()
         key = (len(self.arrivals), int(now / c.bin_s))
-        if key == self._cache_key:
+        if key != self._cache_key:
+            self._cache_key = key
+            self._cache = self._detect(now)
+        if self._cache is not None:
             return self._cache
-        self._cache_key = key
-        self._cache = self._detect(now)
-        return self._cache
+        # fresh history can't answer yet: fall back to the persisted prior
+        return self._seed_detect()
 
     def _detect(self, now: float) -> tuple[float, float] | None:
         c = self.cfg
@@ -172,6 +222,12 @@ class PeriodicityDetector:
                 return None
             period_s, _ = det
         c = self.cfg
+        s = self._seed
+        if (s is not None and self.span() < period_s
+                and abs(float(s["period_s"]) - period_s) <= c.bin_s):
+            # under one full cycle of fresh history: the persisted fold is
+            # still the better estimate of the phase profile
+            return np.asarray(s["rates"], dtype=float)
         n_phase = max(int(round(period_s / c.bin_s)), 1)
         counts, t0 = self._counts(now)
         n_bins = len(counts)
@@ -244,9 +300,22 @@ class ForecastDemand(FunctionDemand):
         horizon = self.fcfg.lookahead_s + self.fcfg.bin_s
         return f is not None and f * horizon >= 0.5
 
+    # -- persistence ----------------------------------------------------
+
+    def export_state(self, now: float | None = None) -> dict | None:
+        """Serializable periodicity profile (detector state), or None."""
+        return self.detector.to_state(now)
+
+    def seed_state(self, state: dict | None) -> bool:
+        """Install a persisted profile as this demand's prior."""
+        return self.detector.seed(state)
+
     def forgettable(self, now: float | None = None) -> bool:
         """Keep the learned period through troughs: only forget once the
-        entire history window has gone quiet."""
+        entire history window has gone quiet.  A seeded entry that has not
+        yet seen traffic is kept — forgetting it would discard the
+        persisted profile before the ramp it predicts arrives."""
         now = self.clock() if now is None else now
-        return (self.last_arrival is None
-                or now - self.last_arrival > self.fcfg.history_s)
+        if self.last_arrival is None:
+            return not self.detector.seeded
+        return now - self.last_arrival > self.fcfg.history_s

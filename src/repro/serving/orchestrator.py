@@ -225,6 +225,17 @@ class Orchestrator:
         with rec.lock:
             return len(rec.idle)
 
+    def warm_counts(self) -> dict[str, int]:
+        """Idle warm instances per registered function (the canonical
+        ``warm_instances`` stat — telemetry/schema.py)."""
+        with self._lock:
+            records = dict(self.functions)
+        out = {}
+        for name, rec in records.items():
+            with rec.lock:
+                out[name] = len(rec.idle)
+        return out
+
     def prewarm(self, name: str, n: int, *, wait: bool = False) -> int:
         """Pre-spawn up to ``n`` warm instances of ``name`` on a pool thread.
 

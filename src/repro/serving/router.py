@@ -28,6 +28,7 @@ from collections import deque
 from typing import Any
 
 from ..core.reap import ColdStartReport
+from ..telemetry import TELEMETRY
 from .orchestrator import Orchestrator
 
 
@@ -100,9 +101,10 @@ class Router:
 
     def __init__(self, orch: Orchestrator, cfg: RouterConfig | None = None,
                  *, start: bool = True, clock=time.perf_counter,
-                 arrival_clock=time.monotonic):
+                 arrival_clock=time.monotonic, registry=None):
         self.orch = orch
         self.cfg = cfg or RouterConfig()
+        self.registry = TELEMETRY if registry is None else registry
         # queue/drain deltas use ``clock``; arrival taps use
         # ``arrival_clock`` because the policy/demand consumers compare
         # those stamps against their own monotonic clocks
@@ -157,10 +159,12 @@ class Router:
                 arr.append(t_arr)
             if len(q) >= self.cfg.queue_depth:
                 self.rejected += 1
+                self.registry.inc("router.rejected")
                 raise AdmissionError(
                     f"{name}: queue depth {self.cfg.queue_depth} exceeded")
             q.append(inv)
             self._cv.notify()
+        self.registry.inc("router.submitted")
         return inv
 
     def invoke(self, name: str, batch: dict, *, force_cold: bool = False,
@@ -287,6 +291,7 @@ class Router:
                 if inv is None:      # closed and nothing dispatchable
                     return
             inv.queue_s = self.clock() - inv.t_submit
+            self.registry.observe("router.queue_s", inv.queue_s)
             try:
                 out, rep = self.orch.invoke(inv.name, inv.batch,
                                             force_cold=inv.force_cold,
@@ -300,6 +305,7 @@ class Router:
                     self._inflight[inv.name] -= 1
                     self.completed += 1
                     self._cv.notify_all()
+                self.registry.inc("router.completed")
 
 
 def percentile(xs: list[float], q: float) -> float:

@@ -1,5 +1,6 @@
-"""Seeded REP001/REP002/REP003/REP005 violations in a serving/ path.
-Never imported — parsed by the static analyzer in tests/test_analysis.py."""
+"""Seeded REP001/REP002/REP003/REP005/REP006 violations in a serving/
+path.  Never imported — parsed by the static analyzer in
+tests/test_analysis.py."""
 import time
 
 
@@ -34,3 +35,14 @@ def flat_stage_write(report):
 
 def legal_stage_write(timings):
     timings.install_s = 1.0     # allowed: StageTimings receiver
+
+
+class SneakyEmitter:
+    def queue_stats(self):      # REP006: ad-hoc stats dict in serving/
+        return {"queued": 1, "inflight": 2, "dropped": 3}
+
+    def reset_stats(self):      # allowed: returns nothing, no dict built
+        self.n = 0
+
+    def stats_name_only(self):  # not stats-like: name doesn't match
+        return {"a": 1, "b": 2}

@@ -93,6 +93,14 @@ def test_rep005_flat_stage_write_fires(lint_findings):
     assert not any(f.symbol == "legal_stage_write" for f in hits)
 
 
+def test_rep006_adhoc_stats_dict_fires(lint_findings):
+    hits = [f for f in lint_findings if f.rule == "REP006"]
+    assert any(f.symbol == "SneakyEmitter.queue_stats" for f in hits)
+    # no dict built / name not stats-like: both stay legal
+    assert not any(f.symbol.endswith("reset_stats") for f in hits)
+    assert not any(f.symbol.endswith("stats_name_only") for f in hits)
+
+
 # -------------------------------------------------------------------------
 # the real tree: clean modulo the checked-in baseline
 # -------------------------------------------------------------------------
