@@ -27,6 +27,17 @@ Experiments (identical replayed traces across arms):
     ramp spills the hot functions beyond their home node, the spillover
     placements land on already-prewarmed replicas (``prewarmed=True``)
     instead of paying cold starts.
+  * **Dedup scale** — a 10x-function-count record wave (replica functions
+    deployed from a small pool of runtime images, each with a few private
+    pages) written once as legacy flat WS files and once through the
+    content-addressed page store (core/pagestore.py).  Reported per arm:
+    on-disk store bytes at 1x and 10x the image count (flat grows
+    linearly, the chunk store sublinearly), re-record bytes after a small
+    delta (flat rewrites everything, cas appends only changed chunks),
+    and shard-tier ``transfer_bytes`` when a cold node pulls every WS
+    from its owners (the manifest wire ships only chunks the requester's
+    L1 is missing from *any* function; the flat arm reproduces the
+    pre-manifest protocol where every byte ships).
 
 ``--quick`` (CI) runs 4 nodes x 6 smoke functions and writes a
 ``BENCH_cluster.json`` artifact next to ``BENCH_scalability.json``.
@@ -408,10 +419,187 @@ def run_demand_ab(function: str = "olmo-1b", *, quick: bool = False,
     return out
 
 
-def write_artifact(ab: dict, kill: dict, demand: dict) -> None:
+def run_dedup_scale(*, quick: bool = False, n_nodes: int = 4,
+                    verbose: bool = True) -> dict:
+    """Flat-file vs content-addressed store at 10x the A/B function count.
+
+    The fleet shape the page store targets: many functions are *replicas*
+    of a few runtime images (same interpreter/framework arena, a handful
+    of function-private pages).  The wave fabricates that shape
+    deterministically — ``n_variants`` page pools, ``10x`` functions
+    assigned round-robin, ``uniq`` private pages each — and records every
+    function twice, once per format, through the real
+    :func:`repro.core.reap.write_record` path.
+
+    Measured per arm: on-disk WS bytes after the first ``n_variants``
+    records (1x) and after all (10x); bytes written by a small-delta
+    re-record wave; and the shard tier's ``transfer_bytes`` when one cold
+    node pulls every WS from its owners.  The cas arm's wire diffs the
+    serving peer's chunk hashes against the requester L1's cross-function
+    chunk index; the flat arm clears the requester L1 between fetches to
+    reproduce the pre-manifest protocol (every fetch ships the full WS —
+    exactly what ``transfer_bytes`` charged before manifests existed).
+    Every reassembled WS is verified byte-identical to its source arena.
+    """
+    import shutil
+
+    import numpy as np
+
+    from repro.cluster.shardmap import ConsistentHashRing
+    from repro.cluster.snapstore import ShardedSnapshotStore, TransferModel
+    from repro.core import pagestore
+    from repro.core.reap import (PAGE, WS_CACHE, ReapConfig, _read_ws,
+                                 write_record, ws_path)
+
+    n_variants = 6 if quick else 10      # distinct runtime images
+    scale = 10                            # the 10x arm
+    n_fns = n_variants * scale
+    n_pages = 48 if quick else 128        # WS pages per function
+    uniq = 4                              # function-private pages
+    delta_pages = 3                       # pages changed by the re-record
+    cfg = ReapConfig(o_direct=False)
+    root = os.path.join(common.ensure_store(), "dedup_scale")
+    if verbose:
+        print(f"\n-- dedup scale: {n_fns} fns from {n_variants} images "
+              f"({n_pages} pages each, {uniq} private) --")
+
+    out: dict = {"n_functions": n_fns, "n_variants": n_variants,
+                 "pages_per_fn": n_pages, "unique_pages_per_fn": uniq,
+                 "arms": {}}
+    for fmt in ("flat", "cas"):
+        arm_dir = os.path.join(root, fmt)
+        shutil.rmtree(arm_dir, ignore_errors=True)
+        os.makedirs(arm_dir)
+        # drop any registered store whose directory we just removed — a
+        # cached instance would keep serving chunks from a deleted fd
+        pagestore.reset_stores()
+        WS_CACHE.clear()
+        pools = [np.random.default_rng(1000 + v).integers(
+                     0, 256, size=(n_pages, PAGE), dtype=np.uint8)
+                 for v in range(n_variants)]
+
+        # -- record wave -------------------------------------------------
+        arenas: dict[str, np.ndarray] = {}
+        bases: list[str] = []
+        size_at_1x = 0.0
+
+        def _ws_bytes():
+            b = sum(os.path.getsize(ws_path(bb)) for bb in bases)
+            if fmt == "cas":
+                b += pagestore.get_store(arm_dir).stats()["store_bytes"]
+            return b
+
+        for i in range(n_fns):
+            name = f"ds_{i:03d}"
+            base = os.path.join(arm_dir, name)
+            arena = pools[i % n_variants].copy()
+            priv = np.random.default_rng(7000 + i).integers(
+                0, 256, size=(uniq, PAGE), dtype=np.uint8)
+            arena[n_pages - uniq:] = priv
+            with open(base + ".mem", "wb") as f:
+                f.write(arena.tobytes())
+            trace = [int(p) for p in
+                     np.random.default_rng(5000 + i).permutation(n_pages)]
+            write_record(base, trace, fmt=fmt)
+            arenas[base] = arena
+            bases.append(base)
+            if i + 1 == n_variants:
+                size_at_1x = _ws_bytes()
+        size_at_10x = _ws_bytes()
+
+        # -- restore parity: every WS reassembles byte-identically -------
+        parity = True
+        for base in bases:
+            pages, data = _read_ws(base, cfg)
+            arena = arenas[base]
+            for j, p in enumerate(pages):
+                if data[j * PAGE:(j + 1) * PAGE] != arena[p].tobytes():
+                    parity = False
+        assert parity, f"{fmt}: reassembled WS differs from source arena"
+
+        # -- delta re-record: change a few private pages of one image's
+        #    replicas (flat rewrites the whole file; cas appends chunks)
+        if fmt == "cas":
+            writes_before = pagestore.get_store(arm_dir).stats()[
+                "chunk_writes"]
+        rerecord_bytes = 0
+        for i in range(0, n_fns, n_variants):
+            base = bases[i]
+            arena = arenas[base]
+            mod = np.random.default_rng(9000 + i).integers(
+                0, 256, size=(delta_pages, PAGE), dtype=np.uint8)
+            arena[n_pages - delta_pages:] = mod
+            with open(base + ".mem", "r+b") as f:
+                f.seek((n_pages - delta_pages) * PAGE)
+                f.write(mod.tobytes())
+            trace = [int(p) for p in
+                     np.random.default_rng(5000 + i).permutation(n_pages)]
+            write_record(base, trace, fmt=fmt)
+            if fmt == "flat":
+                rerecord_bytes += os.path.getsize(ws_path(base))
+        if fmt == "cas":
+            st = pagestore.get_store(arm_dir).stats()
+            rerecord_bytes = (st["chunk_writes"] - writes_before) * PAGE
+
+        # -- shard-tier transfer: a cold node pulls every WS from owners
+        ring = ConsistentHashRing()
+        store = ShardedSnapshotStore(
+            ring, transfer=TransferModel(latency_s=1e-6, gbps=100.0),
+            reap=cfg)
+        for k in range(n_nodes):
+            store.attach(f"node-{k}")
+        requester = store.attach("requester")
+        store.set_alive("requester", False)   # off-ring: never an owner
+        for base in bases:
+            store.warm_owners(base)
+        store.reset_stats()
+        for base in bases:
+            if fmt == "flat":
+                requester.clear()             # pre-manifest wire protocol
+            requester.fetch(base, cfg)
+        st = store.stats()
+        arm = {
+            "store_mb_1x": round(size_at_1x / 1e6, 3),
+            "store_mb_10x": round(size_at_10x / 1e6, 3),
+            "store_growth_10x": round(size_at_10x / max(size_at_1x, 1), 2),
+            "rerecord_mb": round(rerecord_bytes / 1e6, 3),
+            "remote_fetches": st["remote_fetches"],
+            "transfer_bytes": st["transfer_bytes"],
+            "transfer_mb": round(st["transfer_bytes"] / 1e6, 3),
+            "dedup_bytes_saved_mb": round(st["dedup_bytes_saved"] / 1e6, 3),
+            "restore_parity": parity,
+        }
+        if fmt == "cas":
+            ps = pagestore.get_store(arm_dir).stats()
+            arm["dedup_ratio"] = round(ps["dedup_ratio"], 3)
+            arm["delta_chunks"] = ps["delta_chunks"]
+            arm["dedup_hits"] = ps["dedup_hits"]
+        store.close()
+        out["arms"][fmt] = arm
+        if verbose:
+            extra = (f" dedup_ratio={arm['dedup_ratio']:.2f}"
+                     if fmt == "cas" else "")
+            print(f"  {fmt:5s} store {arm['store_mb_1x']:.2f}MB @1x -> "
+                  f"{arm['store_mb_10x']:.2f}MB @10x "
+                  f"(x{arm['store_growth_10x']:.1f}) "
+                  f"rerecord={arm['rerecord_mb']:.2f}MB "
+                  f"transfer={arm['transfer_mb']:.2f}MB{extra}")
+
+    flat, cas = out["arms"]["flat"], out["arms"]["cas"]
+    assert cas["transfer_bytes"] < flat["transfer_bytes"], (
+        "manifest wire shipped no less than the flat protocol")
+    assert cas["dedup_ratio"] > 1.5, (
+        f"shared-image configs must dedup >1.5x, got {cas['dedup_ratio']}")
+    assert cas["store_growth_10x"] < flat["store_growth_10x"], (
+        "chunk store grew no slower than flat files at 10x")
+    return out
+
+
+def write_artifact(ab: dict, kill: dict, demand: dict, dedup: dict) -> None:
     with open(ARTIFACT, "w") as f:
         json.dump({"benchmark": "cluster", "placement_ab": ab,
-                   "node_kill": kill, "demand_plane": demand}, f, indent=2)
+                   "node_kill": kill, "demand_plane": demand,
+                   "dedup_scale": dedup}, f, indent=2)
     print(f"\nwrote {ARTIFACT}")
 
 
@@ -435,6 +623,7 @@ def main(argv=None):
     kill = run_node_kill(args.function, quick=args.quick, n_nodes=args.nodes)
     demand = run_demand_ab(args.function, quick=args.quick,
                            n_nodes=args.nodes)
+    dedup = run_dedup_scale(quick=args.quick, n_nodes=args.nodes)
     for tname, arms in ab.items():
         if not isinstance(arms, dict) or "locality" not in arms:
             continue
@@ -451,8 +640,13 @@ def main(argv=None):
           f"aggregator vs {off['spillover_prewarmed']}/"
           f"{off['spillover_served']} without; post-ramp cold "
           f"{on['post_ramp_cold']} vs {off['post_ramp_cold']}")
+    flat, cas = dedup["arms"]["flat"], dedup["arms"]["cas"]
+    print(f"\ndedup scale ({dedup['n_functions']} fns): store at 10x "
+          f"{cas['store_mb_10x']:.1f}MB cas vs {flat['store_mb_10x']:.1f}MB "
+          f"flat (dedup {cas['dedup_ratio']:.1f}x); cold-node transfer "
+          f"{cas['transfer_mb']:.1f}MB vs {flat['transfer_mb']:.1f}MB")
     if args.quick:
-        write_artifact(ab, kill, demand)
+        write_artifact(ab, kill, demand, dedup)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,11 @@ clocks):
   * scalability ``policy_ab``:  per-trace WS cache hit rate (lower = worse)
   * cluster per-arm:            cold p95 (higher = worse) and L1 local hit
     rate (lower = worse)
+  * cluster ``dedup_scale``:    cas-arm ``transfer_bytes`` (higher = worse:
+    the manifest wire started shipping chunks the requester already held)
+    and ``dedup_ratio`` (lower = worse: cross-function page sharing
+    regressed) — both byte/ratio counters over a deterministic record
+    wave, fully stable run-to-run
 
 Informational deltas are printed for everything else in the baseline.
 Regenerate baselines (after an intentional perf change) with::
@@ -56,7 +61,7 @@ TRAJECTORY = os.path.join(BASELINE_DIR, "trajectory.jsonl")
 #: by name (nonzero exit) instead of surfacing as a bare KeyError later.
 EXPECTED_SECTIONS = {
     "BENCH_scalability.json": ("burst_ab", "overlap_ab", "policy_ab"),
-    "BENCH_cluster.json": ("placement_ab", "demand_plane"),
+    "BENCH_cluster.json": ("placement_ab", "demand_plane", "dedup_scale"),
 }
 
 
@@ -100,6 +105,10 @@ def _guards(name: str, artifact: dict) -> list[tuple[str, str]]:
 
         for section in ("placement_ab", "demand_plane"):
             walk(artifact.get(section), section)
+        for path, direction in (("dedup_scale.arms.cas.transfer_bytes", "up"),
+                                ("dedup_scale.arms.cas.dedup_ratio", "down")):
+            if _dig(artifact, path) is not None:
+                guards.append((path, direction))
     return guards
 
 

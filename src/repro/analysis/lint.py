@@ -1,4 +1,4 @@
-"""Repo-invariant lint rules (REP001–REP005).
+"""Repo-invariant lint rules (REP001–REP007).
 
 These encode invariants the codebase already depends on but nothing
 enforced until now:
@@ -28,6 +28,13 @@ REP006  telemetry emission goes through ``MetricsRegistry``: a *new*
         ``core/restore.py``) is flagged unless it is one of the documented
         snapshotter surfaces (telemetry/schema.py) listed in
         ``REP006_STATS_SURFACES``.
+REP007  WS bytes are content-addressed: the ``.ws`` file may be a chunk
+        manifest, so *reading* it as raw bytes (``open``/``os.open``/
+        ``PageSource``/``np.memmap``/``np.fromfile`` over a ``ws_path()``
+        argument) is only legal inside ``core/pagestore.py`` and the
+        legacy flat-format seam (``core/reap.py::_read_ws_flat``).
+        Metadata probes (``getmtime``/``exists``) and write-mode opens
+        stay legal everywhere.
 """
 from __future__ import annotations
 
@@ -73,6 +80,16 @@ REP006_STATS_SURFACES = {
     ("cluster/demand.py", "DemandAggregator.stats"),
     ("cluster/snapstore.py", "ShardedSnapshotStore.stats"),
 }
+
+
+# REP007: the only places allowed to read WS-record bytes directly.  The
+# page store owns the chunk data; _read_ws_flat is the format-versioned
+# fallback for legacy flat WS files (and the flat baseline arm).
+REP007_ALLOWED_FILES = {"core/pagestore.py"}
+REP007_SEAMS = {("core/reap.py", "_read_ws_flat")}
+REP007_READER_NAMES = {"PageSource"}
+REP007_READER_DOTTED = {("os", "open"), ("np", "memmap"), ("np", "fromfile"),
+                        ("numpy", "memmap"), ("numpy", "fromfile")}
 
 
 def _stats_like(name: str) -> bool:
@@ -157,7 +174,69 @@ class _Linter(ast.NodeVisitor):
                          "module; route through the injected clock/sleep "
                          "parameter instead"),
                 detail=f"time.{f.attr}"))
+        self._check_rep007(node)
         self.generic_visit(node)
+
+    # -- REP007 -----------------------------------------------------------
+
+    @staticmethod
+    def _open_mode(node: ast.Call) -> str:
+        if (len(node.args) >= 2 and isinstance(node.args[1], ast.Constant)
+                and isinstance(node.args[1].value, str)):
+            return node.args[1].value
+        for kw in node.keywords:
+            if (kw.arg == "mode" and isinstance(kw.value, ast.Constant)
+                    and isinstance(kw.value.value, str)):
+                return kw.value.value
+        return "r"
+
+    @staticmethod
+    def _has_ws_path_call(expr: ast.expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call):
+                g = n.func
+                if isinstance(g, ast.Name) and g.id == "ws_path":
+                    return True
+                if isinstance(g, ast.Attribute) and g.attr == "ws_path":
+                    return True
+        return False
+
+    def _check_rep007(self, node: ast.Call) -> None:
+        """Flag raw byte reads of a ``ws_path()`` file outside the page
+        store and the legacy fallback seam."""
+        if self.rel in REP007_ALLOWED_FILES:
+            return
+        fn = self.stack[-1] if self.stack else None
+        if (self.rel, fn) in REP007_SEAMS:
+            return
+        f = node.func
+        target = None
+        if isinstance(f, ast.Name):
+            if f.id == "open":
+                mode = self._open_mode(node)
+                if any(c in mode for c in "wax"):
+                    return               # writers are legal everywhere
+                target = "open"
+            elif f.id in REP007_READER_NAMES:
+                target = f.id
+        elif isinstance(f, ast.Attribute):
+            if f.attr in REP007_READER_NAMES:
+                target = f.attr
+            elif (isinstance(f.value, ast.Name)
+                    and (f.value.id, f.attr) in REP007_READER_DOTTED):
+                target = f"{f.value.id}.{f.attr}"
+        if target is None:
+            return
+        if not any(self._has_ws_path_call(a)
+                   for a in [*node.args, *[k.value for k in node.keywords]]):
+            return
+        self.findings.append(Finding(
+            rule="REP007", path=self.rel, line=node.lineno,
+            symbol=_qualname_stack(self.stack),
+            message=(f"direct WS byte read ({target} over ws_path(...)); "
+                     "the .ws file may be a chunk manifest — go through "
+                     "core/pagestore.py or the _read_ws_flat legacy seam"),
+            detail=f"ws-byte-read:{target}"))
 
     # -- REP002 / REP005 (attribute writes) -------------------------------
 
@@ -292,7 +371,7 @@ def _module_rep004(rel: str, tree: ast.Module, src: str) -> list[Finding]:
 
 
 def analyze_lint(root: str) -> list[Finding]:
-    """Run REP001–REP006 over every ``.py`` under ``root``."""
+    """Run REP001–REP007 over every ``.py`` under ``root``."""
     findings: list[Finding] = []
     for dirpath, _dirnames, filenames in os.walk(root):
         for fn in sorted(filenames):

@@ -11,19 +11,25 @@ This module shards that tier by the consistent-hash ring (shardmap.py):
 
   * every node gets its own bounded :class:`~repro.core.reap.WSCache`
     (**L1**, attached via :meth:`ShardedSnapshotStore.attach`);
-  * each function name hashes to 1..R **owner** shards; an owner's L1
-    misses go straight to the origin disk (it *is* the serving shard);
-  * a non-owner's L1 miss **peeks** an alive owner's cache: a resident WS
-    is transferred over a modeled network (:class:`TransferModel`,
-    latency + per-page bandwidth cost paid as real sleep time so
-    benchmarks observe it) and installed locally — restores resolve
-    **local hit -> remote fetch -> origin disk**;
+  * each function name hashes to 1..R **owner** shards; a node's L1 miss
+    **peeks** the alive peer replicas' caches (an owner consults its
+    co-owners too before paying the origin read): a resident WS is
+    transferred over a modeled network (:class:`TransferModel`, latency +
+    bandwidth cost paid as real sleep time so benchmarks observe it) and
+    installed locally — restores resolve **local hit -> remote fetch ->
+    origin disk**;
+  * the wire ships only the chunks the requester's L1 doesn't already
+    hold *from any function* (the caches' content-hash index,
+    pagestore.py): ``transfer_bytes`` charges actual-missing bytes and
+    ``dedup_bytes_saved`` the cross-function overlap;
   * a *cold* owner does not serve (counted ``remote_misses``) — the
     requester reads origin itself.  Owner caches are populated by their
     own cold starts and by :meth:`warm_owners` (the scheduler's
     ``rebalance()`` runs it after every ring change);
-  * when no owner is alive (node failure), the non-owner falls back to
-    the origin disk and the event is counted (``dead_owner_fallbacks``).
+  * when no owner that was ever alive remains alive (node failure), the
+    non-owner falls back to the origin disk and the event is counted
+    (``dead_owner_fallbacks``); ring entries that never came up are
+    ordinary ``remote_misses`` — nothing "died".
 
 Deadlock-freedom by construction: the remote tier uses
 :meth:`~repro.core.reap.WSCache.peek`, which serves only *completed*
@@ -87,6 +93,7 @@ class ShardedSnapshotStore:
         self.cache_capacity_bytes = cache_capacity_bytes
         self.caches: dict[str, WSCache] = {}
         self._alive: dict[str, bool] = {}
+        self._ever_alive: set[str] = set()   # dead vs never-up accounting
         self._hot: dict[str, int] = {}       # per-function replication override
         self._mu = threading.Lock()
         self._sleep = sleep                  # injectable for tests
@@ -94,7 +101,8 @@ class ShardedSnapshotStore:
         self.remote_misses = 0               # owner alive but cache cold
         self.origin_reads = 0
         self.dead_owner_fallbacks = 0
-        self.transfer_bytes = 0
+        self.transfer_bytes = 0              # actual-missing chunk bytes shipped
+        self.dedup_bytes_saved = 0           # WS bytes the requester already held
         self.transfer_s = 0.0
         self.group_fetches = 0               # shard fetches serving a batch
         self.group_instances = 0             # instances amortized over those
@@ -135,6 +143,7 @@ class ShardedSnapshotStore:
                         self._shard_fetch(_n, base, cfg, group=group))
                 self.caches[node_id] = cache
             self._alive[node_id] = True
+            self._ever_alive.add(node_id)
         self.ring.add(node_id)
         return cache
 
@@ -143,6 +152,8 @@ class ShardedSnapshotStore:
         the ring, so new placements/ownership exclude it (minimal remap)."""
         with self._mu:
             self._alive[node_id] = alive
+            if alive:
+                self._ever_alive.add(node_id)
         if alive:
             self.ring.add(node_id)
         else:
@@ -174,11 +185,19 @@ class ShardedSnapshotStore:
 
     def _shard_fetch(self, node_id: str, base: str, cfg: ReapConfig,
                      group: int = 1):
-        """L1-miss resolution for ``node_id``: peek an alive owner's cache
-        over the modeled network, else origin disk.  Runs outside any
-        cache lock (the WSCache leader pattern), so the transfer sleep
-        never blocks other functions' fetches; ``peek`` never blocks at
-        all, so no cross-cache wait cycle can form.
+        """L1-miss resolution for ``node_id``: peek an alive peer
+        replica's cache over the modeled network, else origin disk.  An
+        owner consults its co-owner replicas too — a cold owner paying an
+        origin read while an alive peer holds the WS wastes exactly the
+        I/O this tier exists to amortize.  Runs outside any cache lock
+        (the WSCache leader pattern), so the transfer sleep never blocks
+        other functions' fetches; ``peek`` never blocks at all, so no
+        cross-cache wait cycle can form.
+
+        The transfer is charged at **actual-missing bytes**: the serving
+        peer's chunk hashes are diffed against the requester L1's
+        cross-function chunk index, and only absent chunks ship (the rest
+        is ``dedup_bytes_saved``).
 
         ``group`` is the restore-batch size this fetch feeds (restore.py
         threads it through the node's L1): a k-instance group restore
@@ -190,32 +209,46 @@ class ShardedSnapshotStore:
                 self.group_instances += group
         name = os.path.basename(base)
         owners = self.owners(name)
-        if node_id not in owners:
-            any_alive = False
-            for owner in owners:
-                with self._mu:
-                    cache = self.caches.get(owner)
-                    up = self._alive.get(owner, False)
-                if cache is None or not up:
-                    continue
-                any_alive = True
-                served = cache.peek(base)
-                if served is None:
-                    continue             # owner is cold: try next replica
-                pages, data = served
-                cost = self.transfer.cost_s(len(data))
-                self._sleep(cost)
-                with self._mu:
-                    self.remote_fetches += 1
-                    self.transfer_bytes += len(data)
-                    self.transfer_s += cost
-                return pages, data
-            if owners:
-                with self._mu:
-                    if any_alive:
-                        self.remote_misses += 1     # cold owners only
-                    else:
-                        self.dead_owner_fallbacks += 1
+        is_owner = node_id in owners
+        any_alive = False
+        any_ever_alive = False
+        for owner in owners:
+            if owner == node_id:
+                continue                 # own L1 already missed
+            with self._mu:
+                cache = self.caches.get(owner)
+                up = self._alive.get(owner, False)
+                ever = owner in self._ever_alive
+                requester = self.caches.get(node_id)
+            any_ever_alive = any_ever_alive or ever
+            if cache is None or not up:
+                continue
+            any_alive = True
+            served = cache.peek_chunks(base)
+            if served is None:
+                continue                 # owner is cold: try next replica
+            pages, data, hashes = served
+            missing = (requester.missing_chunks(hashes)
+                       if requester is not None else set(hashes))
+            wire_bytes = len(missing) * PAGE
+            cost = self.transfer.cost_s(wire_bytes)
+            self._sleep(cost)
+            with self._mu:
+                self.remote_fetches += 1
+                self.transfer_bytes += wire_bytes
+                self.dedup_bytes_saved += max(len(data) - wire_bytes, 0)
+                self.transfer_s += cost
+            return pages, data
+        if not is_owner and owners:
+            with self._mu:
+                if any_alive:
+                    self.remote_misses += 1      # cold owners only
+                elif any_ever_alive:
+                    self.dead_owner_fallbacks += 1
+                else:
+                    # ring entries that never came up: nothing "died", the
+                    # owner tier simply has no replica yet
+                    self.remote_misses += 1
         pages, data = _read_ws(base, cfg)
         with self._mu:
             self.origin_reads += 1
@@ -279,6 +312,7 @@ class ShardedSnapshotStore:
             self.remote_fetches = self.remote_misses = 0
             self.origin_reads = self.dead_owner_fallbacks = 0
             self.transfer_bytes = 0
+            self.dedup_bytes_saved = 0
             self.transfer_s = 0.0
             self.group_fetches = self.group_instances = 0
             self.pushed_invalidations = 0
@@ -294,6 +328,7 @@ class ShardedSnapshotStore:
                 "origin_reads": self.origin_reads,
                 "dead_owner_fallbacks": self.dead_owner_fallbacks,
                 "transfer_bytes": self.transfer_bytes,
+                "dedup_bytes_saved": self.dedup_bytes_saved,
                 "transfer_s": self.transfer_s,
                 "group_fetches": self.group_fetches,
                 "group_instances": self.group_instances,

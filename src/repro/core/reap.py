@@ -22,10 +22,19 @@
   read), keyed by ``(base, ws-file mtime)`` so re-recording invalidates
   naturally.  ``drop_record`` / ``write_record`` also invalidate explicitly.
 
+* **Content-addressed records** (pagestore.py): by default ``f.ws`` holds
+  a *manifest* — the ordered page indices mapped to content hashes — and
+  the page bytes live once, fleet-wide, in the store directory's shared
+  chunk store.  A re-record writes only the chunks the store doesn't
+  already hold (delta), ``drop_record`` refcounts/GCs, and legacy flat WS
+  files (or ``record_format="flat"``) still read through the
+  :func:`_read_ws_flat` fallback seam.
+
 Files for function ``f`` under ``store_dir``:
   ``f.mem`` + ``f.manifest.json``   guest memory file (arena.py)
-  ``f.ws``                          working-set file (contiguous pages)
+  ``f.ws``                          WS manifest (v2) or flat pages (legacy)
   ``f.trace.npy``                   int64 page indices (original offsets)
+  ``.pagestore/``                   shared content-addressed chunk store
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ import time
 
 import numpy as np
 
+from . import pagestore
 from .arena import PAGE, GuestMemoryFile, InstanceArena, PageSource
 from ..telemetry import TELEMETRY
 
@@ -50,6 +60,8 @@ class ReapConfig:
     min_ws_read: int = 8 << 20       # single-read floor noted in §5.2.3 (bytes)
     share_ws_cache: bool = True      # dedupe concurrent WS reads process-wide
     fuse_engine: str = "auto"        # group-install gather: auto|numpy|pallas
+    record_format: str = "cas"       # cas => content-addressed manifest;
+    #                                  flat => legacy contiguous WS file
     # -- overlapped restore (serve from a hot prefix, install the tail in
     # the background).  Off by default so raw pipelines keep the PR-5
     # fully-resident-at-materialize contract; the serving layer's
@@ -212,13 +224,20 @@ def choose_hot_prefix(times: list[float], *,
     if not gaps:
         return None
     best_gap, best_i = max(gaps)
-    others = sorted(g for g, _ in gaps)
-    median = others[len(others) // 2]
-    # a knee must dominate the typical inter-fault spacing AND be a real
-    # phase boundary in absolute terms — a scheduler hiccup in a
-    # microsecond-spaced record easily clears a relative-only bar and
-    # would pin a spurious cut
-    if best_gap < max(8 * median, min_gap_s):
+    # the baseline is the *other* gaps' median: including the winner in
+    # its own baseline inflates the 8x bar on short traces (a handful of
+    # gaps shift the median toward the knee itself) and suppresses
+    # legitimate cuts
+    others = sorted(g for g, i in gaps if i != best_i)
+    threshold = min_gap_s
+    if others:
+        median = others[len(others) // 2]
+        # a knee must dominate the typical inter-fault spacing AND be a
+        # real phase boundary in absolute terms — a scheduler hiccup in a
+        # microsecond-spaced record easily clears a relative-only bar and
+        # would pin a spurious cut
+        threshold = max(8 * median, min_gap_s)
+    if best_gap < threshold:
         return None
     return best_i
 
@@ -232,15 +251,51 @@ def read_hot_prefix(base: str) -> int | None:
         return None
 
 
+def _sweep_tmp(base: str) -> int:
+    """Remove crash leftovers of an interrupted ``write_record``: a failure
+    between a ``.tmp`` write and its ``os.replace`` strands the temp file
+    forever (nothing else ever matches its name).  Returns files removed.
+    """
+    removed = 0
+    for p in (ws_path(base) + ".tmp",
+              trace_path(base) + ".tmp.npy",
+              cut_path(base) + ".tmp"):
+        try:
+            os.remove(p)
+            removed += 1
+        except OSError:
+            pass
+    return removed
+
+
+def _write_ws_flat(base: str, pages: list[int], src: PageSource) -> None:
+    """Legacy flat WS writer: contiguous page bytes in fault order.  Kept
+    for the ``record_format="flat"`` baseline arm; with the REP007 seam
+    :func:`_read_ws_flat` this is the only flat-file producer."""
+    with open(ws_path(base) + ".tmp", "wb") as f:
+        for p in pages:
+            f.write(src.read_span(p * PAGE, PAGE))
+    os.replace(ws_path(base) + ".tmp", ws_path(base))
+
+
 def write_record(base: str, trace: list[int],
-                 times: list[float] | None = None) -> tuple[int, int]:
-    """Copy traced pages into the compact WS file + write the trace file.
+                 times: list[float] | None = None, *,
+                 fmt: str = "cas") -> tuple[int, int]:
+    """Persist the traced pages as a WS record + write the trace file.
 
     Returns (n_pages, ws_bytes).  Duplicates are dropped, order preserved
     (the order is the fault order -- §5.2.1).  When per-fault ``times``
     accompany the trace, the hot-prefix cut point (overlapped restore) is
     derived from the boot→execution timing knee and persisted alongside.
+
+    ``fmt="cas"`` (default) writes a content-addressed manifest: page
+    bytes are chunk-hashed into the store directory's shared
+    :class:`~repro.core.pagestore.PageStore`, so a re-record appends only
+    chunks the store doesn't hold (delta) and identical pages across
+    functions are stored once.  ``fmt="flat"`` keeps the legacy
+    contiguous WS file.  ``ws_bytes`` is the logical WS size either way.
     """
+    _sweep_tmp(base)
     seen: set[int] = set()
     pages: list[int] = []
     page_times: list[float] = []
@@ -253,10 +308,27 @@ def write_record(base: str, trace: list[int],
     arr = np.asarray(pages, dtype=np.int64)
     src = PageSource(base + ".mem", o_direct=False)
     try:
-        with open(ws_path(base) + ".tmp", "wb") as f:
+        prior = pagestore.read_manifest(ws_path(base))
+        if fmt == "flat":
+            _write_ws_flat(base, pages, src)
+            if prior is not None:
+                # format downgrade: the flat file replaced a manifest, so
+                # its chunk references must not pin store bytes forever
+                store = pagestore.get_store(os.path.dirname(base) or ".")
+                store.release_manifest(prior["chunks"])
+        else:
+            blocks: dict[str, bytes] = {}
+            hashes: list[str] = []
             for p in pages:
-                f.write(src.read_span(p * PAGE, PAGE))
-        os.replace(ws_path(base) + ".tmp", ws_path(base))
+                blk = src.read_span(p * PAGE, PAGE)
+                h = pagestore.chunk_hash(blk)
+                hashes.append(h)
+                blocks.setdefault(h, blk)
+            store = pagestore.get_store(os.path.dirname(base) or ".")
+            store.commit_manifest(
+                hashes, blocks,
+                prior=prior["chunks"] if prior is not None else None)
+            pagestore.write_manifest(ws_path(base), pages, hashes)
         np.save(trace_path(base) + ".tmp.npy", arr)
         os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
         if len(page_times) == len(pages) and pages:
@@ -278,38 +350,77 @@ def write_record(base: str, trace: list[int],
 def drop_record(base: str) -> None:
     WS_CACHE.invalidate(base)
     _broadcast_invalidation(base)
+    _sweep_tmp(base)
+    man = pagestore.read_manifest(ws_path(base))
+    if man is not None:
+        # release this manifest's chunk references; chunks shared with
+        # other functions' manifests survive, orphans are GC'd
+        store = pagestore.get_store(os.path.dirname(base) or ".")
+        store.release_manifest(man["chunks"])
     for p in (trace_path(base), ws_path(base), cut_path(base)):
         if os.path.exists(p):
             os.remove(p)
 
 
-def _read_ws(base: str, cfg: ReapConfig) -> tuple[list[int], bytes]:
-    """One O_DIRECT read of the full WS file + its page-index trace."""
+def _read_ws_flat(base: str, cfg: ReapConfig,
+                  k: int | None = None) -> tuple[list[int], bytes]:
+    """Legacy flat-WS fallback seam: one O_DIRECT span read of a
+    pre-manifest (or ``record_format="flat"``) WS file.  ``k`` limits the
+    read to the first ``k`` fault-order pages (the file's head IS the hot
+    prefix, §5.2.1).  This function and :class:`PageStore` internals are
+    the only places allowed to read WS bytes directly (lint REP007)."""
     pages = np.load(trace_path(base))
+    n = len(pages) if k is None else min(k, len(pages))
     src = PageSource(ws_path(base), o_direct=cfg.o_direct)
     try:
-        data = src.read_span(0, len(pages) * PAGE)
+        data = src.read_span(0, n * PAGE)
     finally:
         src.close()
     return [int(p) for p in pages], data
 
 
+def _read_ws(base: str, cfg: ReapConfig) -> tuple[list[int], bytes]:
+    """Resolve the full WS: reassemble a v2 manifest from the shared
+    chunk store (adjacent chunks coalesce back into span reads), or fall
+    back to the flat reader for legacy files."""
+    man = pagestore.read_manifest(ws_path(base))
+    if man is None:
+        return _read_ws_flat(base, cfg)
+    pages = np.load(trace_path(base))
+    chunks = man["chunks"]
+    if len(chunks) != len(pages):
+        raise RuntimeError(
+            f"WS manifest/trace length mismatch for {base}: "
+            f"{len(chunks)} chunks vs {len(pages)} trace pages")
+    store = pagestore.get_store(os.path.dirname(base) or ".")
+    try:
+        data = store.read_chunks(chunks, o_direct=cfg.o_direct)
+    except KeyError as e:
+        # a concurrent §7.2 drop/re-record released the chunks under us;
+        # surface the same signal a vanished flat file would
+        raise FileNotFoundError(f"WS chunks for {base} dropped: {e}") from e
+    return [int(p) for p in pages], data
+
+
 def _read_ws_prefix(base: str, cfg: ReapConfig,
                     k: int) -> tuple[list[int], bytes]:
-    """Read only the first ``k`` fault-order pages of the WS file.
+    """Read only the first ``k`` fault-order pages of the WS.
 
-    The WS file's layout IS the fault order (§5.2.1), so the hot prefix of
-    an overlapped restore is literally the file's head — one short span
-    read instead of the full-file read.  Returns the FULL page-index list
-    (the tail indices are needed for the pending-install markers) with
-    data covering only the prefix."""
+    The WS layout IS the fault order (§5.2.1), so the hot prefix of an
+    overlapped restore is the manifest's (or flat file's) head — a short
+    chunk-store read instead of the full reassembly.  Returns the FULL
+    page-index list (the tail indices are needed for the pending-install
+    markers) with data covering only the prefix."""
+    man = pagestore.read_manifest(ws_path(base))
+    if man is None:
+        return _read_ws_flat(base, cfg, k)
     pages = np.load(trace_path(base))
     k = min(k, len(pages))
-    src = PageSource(ws_path(base), o_direct=cfg.o_direct)
+    store = pagestore.get_store(os.path.dirname(base) or ".")
     try:
-        data = src.read_span(0, k * PAGE)
-    finally:
-        src.close()
+        data = store.read_chunks(man["chunks"][:k], o_direct=cfg.o_direct)
+    except KeyError as e:
+        raise FileNotFoundError(f"WS chunks for {base} dropped: {e}") from e
     return [int(p) for p in pages], data
 
 
@@ -341,6 +452,12 @@ class WSCache:
     The cache is **bounded**: inserts beyond ``capacity_bytes`` evict LRU
     entries (``evicted`` stat), so a long fleet run over many functions
     cannot grow the cache without bound.
+
+    **Chunk index**: every entry also carries its per-page content hashes
+    (pagestore.py), maintained in a cross-entry refcount index so the
+    shard tier can ask what this cache already holds *from any function*
+    (:meth:`missing_chunks`) and ship only the missing chunks over the
+    wire (:meth:`peek_chunks` on the serving side).
     """
 
     def __init__(self, capacity_bytes: int = 512 << 20, *,
@@ -348,7 +465,9 @@ class WSCache:
         self.capacity_bytes = capacity_bytes
         self.source = source             # None => origin-disk _read_ws
         self._lock = threading.Lock()
-        self._entries: dict[str, tuple[float, list[int], bytes]] = {}
+        # base -> (mtime, pages, data, per-page chunk hashes)
+        self._entries: dict[str, tuple[float, list[int], bytes, list[str]]] = {}
+        self._chunks: dict[str, int] = {}  # chunk hash -> #entries holding it
         self._inflight: dict[str, threading.Event] = {}
         self._gens: dict[str, int] = {}  # bumped by every invalidation
         self._order: list[str] = []      # LRU order, oldest first
@@ -368,14 +487,27 @@ class WSCache:
             self._order.remove(base)
         self._order.append(base)
 
+    def _chunks_add(self, hashes: list[str]) -> None:
+        for h in set(hashes):
+            self._chunks[h] = self._chunks.get(h, 0) + 1
+
+    def _chunks_sub(self, hashes: list[str]) -> None:
+        for h in set(hashes):
+            n = self._chunks.get(h, 0) - 1
+            if n <= 0:
+                self._chunks.pop(h, None)
+            else:
+                self._chunks[h] = n
+
     def _evict(self) -> None:
         # Never evict the newest entry: an entry larger than the whole
         # capacity must survive its own insert so concurrent followers can
         # still hit it (it becomes LRU-oldest and goes on the next insert).
         while self._bytes > self.capacity_bytes and len(self._order) > 1:
             victim = self._order.pop(0)
-            _, _, data = self._entries.pop(victim)
+            _, _, data, hashes = self._entries.pop(victim)
             self._bytes -= len(data)
+            self._chunks_sub(hashes)
             self.evicted += 1
             TELEMETRY.inc("ws_cache.evicted")
 
@@ -431,14 +563,17 @@ class WSCache:
         try:
             pages, data = (_read_ws(base, cfg) if self.source is None
                            else self._call_source(base, cfg, group))
+            hashes = pagestore.page_hashes(data)  # outside the lock
             with self._lock:
                 self.reads += 1
                 if self._gens.get(base, 0) == gen:
                     old = self._entries.get(base)
                     if old is not None:
                         self._bytes -= len(old[2])
-                    self._entries[base] = (mtime, pages, data)
+                        self._chunks_sub(old[3])
+                    self._entries[base] = (mtime, pages, data, hashes)
                     self._bytes += len(data)
+                    self._chunks_add(hashes)
                     self._lru_touch(base)
                     self._evict()
                 else:
@@ -470,6 +605,17 @@ class WSCache:
         ``count=False`` makes the probe stat-silent — the overlapped
         restore path peeks to decide whether to split its fetch and then
         fetches anyway on a hit, which would otherwise double-count."""
+        served = self.peek_chunks(base, count=count)
+        if served is None:
+            return None
+        pages, data, _hashes = served
+        return pages, data
+
+    def peek_chunks(self, base: str, *, count: bool = True
+                    ) -> tuple[list[int], bytes, list[str]] | None:
+        """:meth:`peek` plus the entry's per-page chunk hashes — the shard
+        tier serves a peer from this and charges the transfer only for
+        the chunks the *requester's* cache is missing."""
         try:
             mtime = os.path.getmtime(ws_path(base))
         except OSError:
@@ -485,7 +631,14 @@ class WSCache:
                 self.peek_hits += 1
                 TELEMETRY.inc("ws_cache.peek_hits")
             self._lru_touch(base)
-            return ent[1], ent[2]
+            return ent[1], ent[2], ent[3]
+
+    def missing_chunks(self, hashes) -> set[str]:
+        """Subset of ``hashes`` held by NO cached entry — of *any*
+        function (cross-function wire dedup: a chunk cached here under
+        one function's WS need not be shipped again for another's)."""
+        with self._lock:
+            return {h for h in set(hashes) if h not in self._chunks}
 
     def invalidate(self, base: str) -> bool:
         """Drop ``base``'s entry; True when an entry was actually held (the
@@ -500,6 +653,7 @@ class WSCache:
             dropped = self._entries.pop(base, None)
             if dropped is not None:
                 self._bytes -= len(dropped[2])
+                self._chunks_sub(dropped[3])
                 self.invalidations += 1
                 TELEMETRY.inc("ws_cache.invalidations")
             if base in self._order:
@@ -511,6 +665,7 @@ class WSCache:
             for base in self._inflight:
                 self._gens[base] = self._gens.get(base, 0) + 1
             self._entries.clear()
+            self._chunks.clear()
             self._order.clear()
             self._bytes = 0
 
@@ -529,7 +684,8 @@ class WSCache:
                     "peek_hits": self.peek_hits,
                     "group_fetches": self.group_fetches,
                     "group_instances": self.group_instances,
-                    "entries": len(self._entries), "bytes": self._bytes}
+                    "entries": len(self._entries), "bytes": self._bytes,
+                    "chunks": len(self._chunks)}
 
 
 #: Process-wide singleton (the orchestrator's host-level page cache analogue).
@@ -590,6 +746,11 @@ class Monitor:
         self.cache = cache
         self.arena = InstanceArena(gm, o_direct=cfg.o_direct)
         self.mode = mode or ("prefetch" if has_record(base) else "record")
+        if self.mode == "record":
+            # record-open hygiene: a crash between a prior recorder's
+            # .tmp write and its os.replace strands temp files next to
+            # the record; sweep them before producing fresh ones
+            _sweep_tmp(base)
         self.prefetched = 0
         self.prefetch_s = 0.0
         self.ws_cache_hit = False
@@ -630,7 +791,8 @@ class Monitor:
             "resident_bytes": self.arena.resident_bytes,
         }
         if self.mode == "record":
-            n, nbytes = write_record(self.base, stats.trace, stats.trace_t)
+            n, nbytes = write_record(self.base, stats.trace, stats.trace_t,
+                                     fmt=self.cfg.record_format)
             out["ws_pages"] = n
             out["ws_bytes"] = nbytes
         elif self.prefetched:

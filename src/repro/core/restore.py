@@ -25,6 +25,12 @@ scalar-prefetched DMA sweep; on CPU the same permutation is a single numpy
 fancy-index (the kernel's interpret mode would cost more than it saves), so
 ``fuse_engine="auto"`` picks per backend and both engines are parity-tested
 byte-for-byte.
+
+The ``ws_fetch`` stage is format-agnostic: ``_read_ws``/``_read_ws_prefix``
+reassemble a content-addressed manifest from the store directory's shared
+chunk store (core/pagestore.py) — adjacent chunks coalesce back into span
+reads — or fall back to the legacy flat-file seam, so the pipeline and the
+group restore never see which format recorded the WS.
 """
 from __future__ import annotations
 

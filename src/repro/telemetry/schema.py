@@ -39,6 +39,22 @@ Node stats (``WorkerNode.stats``)::
     ws_cache           WSCache.stats() (when the node owns a private cache)
     policy             PrewarmPolicy.stats() (when a policy is attached)
 
+Content-addressed page store (``PageStore.stats`` — core/pagestore.py,
+and the shard tier's ``ShardedSnapshotStore.stats``)::
+
+    store_bytes        live unique-chunk bytes held by the chunk store
+    data_bytes         chunks.data file bytes (live + dead, pre-compaction)
+    logical_bytes      flat-file-equivalent WS bytes across live manifests
+    dedup_ratio        logical_bytes / store_bytes (1.0 for an empty store);
+                       >1 means cross-function/intra-WS page sharing
+    delta_chunks       chunks a re-record actually appended (delta writes);
+                       unchanged pages show up as dedup_hits instead
+    dedup_hits         manifest chunks already present at write time
+    transfer_bytes     shard-tier bytes shipped — ONLY chunks the
+                       requester's L1 was missing (actual-missing charge)
+    dedup_bytes_saved  WS bytes a remote fetch did NOT ship because the
+                       requester already held the chunks (any function)
+
 Snapshotter samples (one JSON object per line, see
 :class:`repro.telemetry.StatsSnapshotter`)::
 

@@ -1,0 +1,38 @@
+"""Seeded REP007 violations: raw WS byte reads outside the page store.
+
+Parsed (never imported) by tests/test_analysis.py.  The ``.ws`` file may
+be a chunk manifest, so every raw read here must be flagged; the
+metadata probe and the write-mode open must stay clean.
+"""
+import os
+
+import numpy as np
+
+from repro.core.arena import PageSource
+from repro.core.reap import ws_path
+
+
+def sneaky_open_read(base):
+    with open(ws_path(base), "rb") as f:          # REP007
+        return f.read()
+
+
+def sneaky_page_source(base):
+    return PageSource(ws_path(base), o_direct=False)   # REP007
+
+
+def sneaky_fromfile(base):
+    return np.fromfile(ws_path(base), dtype=np.uint8)  # REP007
+
+
+def sneaky_os_open(base):
+    return os.open(ws_path(base), os.O_RDONLY)    # REP007
+
+
+def legal_mtime_probe(base):
+    return os.path.getmtime(ws_path(base))        # metadata, not bytes
+
+
+def legal_writer(base, blob):
+    with open(ws_path(base) + ".tmp", "wb") as f:  # write-mode: legal
+        f.write(blob)

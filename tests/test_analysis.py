@@ -101,6 +101,16 @@ def test_rep006_adhoc_stats_dict_fires(lint_findings):
     assert not any(f.symbol.endswith("stats_name_only") for f in hits)
 
 
+def test_rep007_ws_byte_reads_fire(lint_findings):
+    hits = [f for f in lint_findings if f.rule == "REP007"]
+    flagged = {f.symbol for f in hits}
+    assert {"sneaky_open_read", "sneaky_page_source",
+            "sneaky_fromfile", "sneaky_os_open"} <= flagged
+    # metadata probes and write-mode opens are not byte reads
+    assert "legal_mtime_probe" not in flagged
+    assert "legal_writer" not in flagged
+
+
 # -------------------------------------------------------------------------
 # the real tree: clean modulo the checked-in baseline
 # -------------------------------------------------------------------------

@@ -93,12 +93,18 @@ def test_ring_empty_and_small():
 # -- sharded snapshot store (no models: fabricated WS records) ------------
 
 def make_record(tmp_path, name: str, n_pages: int = 4) -> str:
-    """Write a fake WS record (trace + ws file) for ``name``."""
+    """Write a fake legacy flat WS record (trace + ws file) for ``name``.
+
+    Page contents are distinct per page (and salted by name) so the
+    shard tier's content-hash wire dedup doesn't collapse the transfer —
+    tests asserting full-WS ``transfer_bytes`` stay meaningful."""
     base = str(tmp_path / name)
     pages = np.arange(n_pages, dtype=np.int64)
     np.save(trace_path(base), pages)
+    salt = sum(name.encode())
     with open(ws_path(base), "wb") as f:
-        f.write(bytes([65 + n_pages % 26]) * (n_pages * PAGE))
+        for i in range(n_pages):
+            f.write(bytes([(salt + i) % 256]) * PAGE)
     return base
 
 
@@ -200,6 +206,81 @@ def test_dead_owner_fallback_counts_when_ring_keeps_owner(store2):
     assert len(data) == 2 * PAGE
     s = store.stats()
     assert s["dead_owner_fallbacks"] == 1 and s["origin_reads"] == 1
+
+
+def _names_owned_by(store, owner: str, prefix: str, k: int = 1) -> list:
+    """First ``k`` generated names whose primary shard is ``owner``."""
+    names, i = [], 0
+    while len(names) < k:
+        name = f"{prefix}{i}"
+        if store.owners(name)[0] == owner:
+            names.append(name)
+        i += 1
+    return names
+
+
+def test_cold_owner_consults_alive_peer_replica_before_origin(store2):
+    """Regression: a replica owner whose own L1 is cold must peek its
+    alive co-owners before paying the origin read — the owner-path early
+    exit used to skip the peer tier entirely."""
+    store, caches, slept, tmp = store2
+    store.set_replication("fnrep", 2)
+    primary, secondary = store.owners("fnrep")   # both of na/nb own it
+    base = make_record(tmp, "fnrep", n_pages=3)
+    cfg = ReapConfig(o_direct=False)
+    caches[secondary].fetch(base, cfg)           # co-owner warms at origin
+    store.reset_stats()
+    _, data, hit = caches[primary].fetch(base, cfg)
+    assert not hit and len(data) == 3 * PAGE
+    s = store.stats()
+    assert s["remote_fetches"] == 1 and s["origin_reads"] == 0
+    assert s["transfer_bytes"] == 3 * PAGE
+    assert slept == [store.transfer.cost_s(3 * PAGE)]
+
+
+def test_never_alive_ring_owner_counts_remote_miss(store2):
+    """Regression: a ring entry that never came up is not a *dead* owner —
+    nothing failed, the owner tier simply has no replica yet.  It used to
+    count ``dead_owner_fallbacks`` and pollute the failure drill's
+    headline counter."""
+    store, caches, slept, tmp = store2
+    store.ring.add("ghost")                      # on the ring, never attached
+    name = _names_owned_by(store, "ghost", "gfn")[0]
+    base = make_record(tmp, name, n_pages=2)
+    requester = "na" if store.owners(name) == ["ghost"] else None
+    assert requester is not None                 # replication=1: sole owner
+    _, data, _ = caches[requester].fetch(base, ReapConfig(o_direct=False))
+    assert len(data) == 2 * PAGE
+    s = store.stats()
+    assert s["remote_misses"] == 1 and s["origin_reads"] == 1
+    assert s["dead_owner_fallbacks"] == 0
+
+
+def test_wire_ships_only_chunks_the_requester_is_missing(store2):
+    """Cross-function wire dedup: a fetch is charged only for chunks the
+    requester's L1 doesn't already hold from *any* function."""
+    store, caches, slept, tmp = store2
+    name_a, name_b = _names_owned_by(store, "na", "wfn", k=2)
+    shared = bytes([7]) * PAGE                   # one page common to both
+    base_a, base_b = str(tmp / name_a), str(tmp / name_b)
+    for base, contents in ((base_a, [bytes([1]) * PAGE, shared]),
+                           (base_b, [shared, bytes([2]) * PAGE])):
+        np.save(trace_path(base), np.arange(len(contents), dtype=np.int64))
+        with open(ws_path(base), "wb") as f:
+            for blk in contents:
+                f.write(blk)
+    cfg = ReapConfig(o_direct=False)
+    assert store.warm_owners(base_a) == 1 and store.warm_owners(base_b) == 1
+    store.reset_stats()
+    caches["nb"].fetch(base_a, cfg)              # cold requester: all ships
+    s = store.stats()
+    assert s["transfer_bytes"] == 2 * PAGE and s["dedup_bytes_saved"] == 0
+    caches["nb"].fetch(base_b, cfg)              # shared page already held
+    s = store.stats()
+    assert s["remote_fetches"] == 2
+    assert s["transfer_bytes"] == 3 * PAGE       # only the missing chunk
+    assert s["dedup_bytes_saved"] == PAGE
+    assert slept[-1] == store.transfer.cost_s(PAGE)
 
 
 def test_replication_factor_for_hot_functions(store2):

@@ -1,0 +1,316 @@
+"""Content-addressed page store (core/pagestore.py) + CAS WS records.
+
+Covers: chunk round-trip byte parity against the flat format under both
+fuse engines, delta re-records appending only changed chunks, refcount GC
+never dropping chunks shared across manifests (plus compaction), the
+legacy flat-WS fallback seam, concurrent readers sharing one store read
+per unique chunk, crash-leftover tmp sweeping, and the hot-prefix knee
+detector's winner-excluded baseline.
+
+Records are fabricated at the ``write_record`` level: a ``.mem`` file is
+just page-granular bytes, so tests control sharing exactly (same page
+bytes => same chunk hash) without arena machinery.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import pagestore
+from repro.core import reap as reap_mod
+from repro.core.reap import (PAGE, ReapConfig, choose_hot_prefix,
+                             cut_path, drop_record, has_record, trace_path,
+                             write_record, ws_path)
+
+CFG = ReapConfig(o_direct=False)
+
+
+def page(tag: int) -> bytes:
+    """A full page of deterministic, tag-unique bytes."""
+    return bytes([tag % 256]) * (PAGE // 2) + bytes([(tag * 7 + 1) % 256]) \
+        * (PAGE // 2)
+
+
+def make_mem(tmp_path, name: str, pages: list[bytes]) -> str:
+    base = str(tmp_path / name)
+    with open(base + ".mem", "wb") as f:
+        for b in pages:
+            f.write(b)
+    return base
+
+
+def store_of(base: str) -> pagestore.PageStore:
+    return pagestore.get_store(os.path.dirname(base))
+
+
+# -- round-trip parity -------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["numpy", "pallas"])
+def test_cas_roundtrip_matches_flat_both_engines(tmp_path, engine):
+    """A CAS record reassembles byte-identically to the flat format, and
+    both fuse engines produce the same install block from it."""
+    from repro.core.restore import fuse_ws_block
+    contents = [page(3), page(5), page(3), page(9)]   # one intra-WS dup
+    trace = [2, 0, 3, 1]
+    cas = make_mem(tmp_path, "cas_fn", contents)
+    flat = make_mem(tmp_path, "flat_fn", contents)
+    write_record(cas, trace, fmt="cas")
+    write_record(flat, trace, fmt="flat")
+
+    pages_c, data_c = reap_mod._read_ws(cas, CFG)
+    pages_f, data_f = reap_mod._read_ws(flat, CFG)
+    assert pages_c == pages_f == trace
+    assert data_c == data_f                      # full byte parity
+    for j, p in enumerate(trace):
+        assert data_c[j * PAGE:(j + 1) * PAGE] == contents[p]
+
+    idx_c, block_c = fuse_ws_block(pages_c, data_c, engine=engine)
+    idx_f, block_f = fuse_ws_block(pages_f, data_f, engine=engine)
+    np.testing.assert_array_equal(idx_c, idx_f)
+    np.testing.assert_array_equal(block_c, block_f)
+
+
+def test_prefix_read_matches_flat(tmp_path):
+    contents = [page(i) for i in range(6)]
+    trace = [4, 1, 5, 0, 2, 3]
+    cas = make_mem(tmp_path, "pcas", contents)
+    flat = make_mem(tmp_path, "pflat", contents)
+    write_record(cas, trace, fmt="cas")
+    write_record(flat, trace, fmt="flat")
+    pages_c, head_c = reap_mod._read_ws_prefix(cas, CFG, 3)
+    pages_f, head_f = reap_mod._read_ws_prefix(flat, CFG, 3)
+    assert pages_c == pages_f == trace           # full index list either way
+    assert head_c == head_f
+    assert len(head_c) == 3 * PAGE
+    assert head_c == contents[4] + contents[1] + contents[5]
+
+
+# -- delta re-records --------------------------------------------------
+
+
+def test_delta_rerecord_appends_only_changed_chunks(tmp_path):
+    contents = [page(10), page(11), page(12), page(13)]
+    base = make_mem(tmp_path, "delta_fn", contents)
+    write_record(base, [0, 1, 2, 3], fmt="cas")
+    store = store_of(base)
+    before = store.stats()
+    # change exactly one page's bytes, then re-record the same trace
+    with open(base + ".mem", "r+b") as f:
+        f.seek(2 * PAGE)
+        f.write(page(99))
+    write_record(base, [0, 1, 2, 3], fmt="cas")
+    after = store.stats()
+    assert after["delta_chunks"] - before["delta_chunks"] == 1
+    assert after["chunk_writes"] - before["chunk_writes"] == 1
+    _, data = reap_mod._read_ws(base, CFG)
+    assert data[2 * PAGE:3 * PAGE] == page(99)   # new bytes are served
+    assert data[:PAGE] == page(10)               # untouched pages survive
+
+
+def test_unchanged_rerecord_writes_nothing(tmp_path):
+    base = make_mem(tmp_path, "same_fn", [page(1), page(2)])
+    write_record(base, [0, 1], fmt="cas")
+    store = store_of(base)
+    before = store.stats()["chunk_writes"]
+    write_record(base, [0, 1], fmt="cas")
+    assert store.stats()["chunk_writes"] == before
+
+
+def test_o_direct_read_does_not_poison_the_write_fd(tmp_path):
+    """Regression: the O_DIRECT read path must use its own fd — flipping
+    the flag on a dup of the write fd poisons the shared open file
+    description, and every later (unaligned) chunk append fails EINVAL."""
+    base = make_mem(tmp_path, "od_fn", [page(14), page(15)])
+    write_record(base, [0, 1], fmt="cas")
+    pages, data = reap_mod._read_ws(base, ReapConfig(o_direct=True))
+    assert data == page(14) + page(15)
+    with open(base + ".mem", "r+b") as f:
+        f.write(page(16))
+    write_record(base, [0, 1], fmt="cas")    # append after a direct read
+    _, data = reap_mod._read_ws(base, ReapConfig(o_direct=True))
+    assert data == page(16) + page(15)
+
+
+# -- refcount GC -------------------------------------------------------
+
+
+def test_gc_never_drops_shared_chunks(tmp_path):
+    """Dropping one manifest frees only its private chunks; chunks shared
+    with a surviving manifest keep serving correct bytes."""
+    a = make_mem(tmp_path, "a_fn", [page(20), page(21), page(22)])
+    b = make_mem(tmp_path, "b_fn", [page(21), page(22), page(23)])
+    write_record(a, [0, 1, 2], fmt="cas")
+    write_record(b, [0, 1, 2], fmt="cas")
+    store = store_of(a)
+    assert store.stats()["chunks"] == 4          # 20..23 stored once
+    drop_record(a)
+    st = store.stats()
+    assert st["gc_freed"] == 1                   # only page(20) was private
+    assert st["chunks"] == 3
+    _, data = reap_mod._read_ws(b, CFG)
+    assert data == page(21) + page(22) + page(23)
+    drop_record(b)
+    assert store.stats()["chunks"] == 0
+
+
+def test_flat_rerecord_releases_prior_manifest_refs(tmp_path):
+    """A format downgrade (cas -> flat) must not pin chunk bytes forever."""
+    base = make_mem(tmp_path, "down_fn", [page(30), page(31)])
+    write_record(base, [0, 1], fmt="cas")
+    store = store_of(base)
+    assert store.stats()["chunks"] == 2
+    write_record(base, [0, 1], fmt="flat")
+    assert store.stats()["chunks"] == 0          # refs released, GC'd
+    _, data = reap_mod._read_ws(base, CFG)       # flat seam still serves
+    assert data == page(30) + page(31)
+
+
+def test_compaction_reclaims_dead_bytes_and_preserves_reads(tmp_path):
+    store = pagestore.PageStore(str(tmp_path / "ps"),
+                                compact_min_bytes=PAGE)
+    try:
+        keep = [pagestore.chunk_hash(page(t)) for t in (40, 41)]
+        dead = [pagestore.chunk_hash(page(t)) for t in (50, 51, 52)]
+        store.commit_manifest(keep, {h: page(t) for h, t
+                                     in zip(keep, (40, 41))})
+        store.commit_manifest(dead, {h: page(t) for h, t
+                                     in zip(dead, (50, 51, 52))})
+        store.release_manifest(dead)
+        st = store.stats()
+        assert st["compactions"] >= 1
+        assert st["data_bytes"] == st["store_bytes"] == 2 * PAGE
+        # survivors still serve correct bytes from the rewritten file
+        assert store.read_chunks(keep) == page(40) + page(41)
+    finally:
+        store.close()
+
+
+# -- legacy flat fallback ----------------------------------------------
+
+
+def test_legacy_pre_manifest_ws_file_reads(tmp_path):
+    """A WS file written before manifests existed (raw concatenated page
+    bytes, no magic) must keep serving through the fallback seam."""
+    base = str(tmp_path / "legacy_fn")
+    contents = [page(60), page(61), page(62)]
+    trace = [5, 0, 9]
+    with open(ws_path(base), "wb") as f:         # hand-rolled legacy file
+        for b in contents:
+            f.write(b)
+    np.save(trace_path(base) + ".tmp.npy", np.asarray(trace, np.int64))
+    os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
+    assert has_record(base)
+    assert pagestore.read_manifest(ws_path(base)) is None
+    pages, data = reap_mod._read_ws(base, CFG)
+    assert pages == trace
+    assert data == b"".join(contents)
+    pages, head = reap_mod._read_ws_prefix(base, CFG, 2)
+    assert pages == trace and head == contents[0] + contents[1]
+
+
+# -- concurrent readers ------------------------------------------------
+
+
+def test_concurrent_readers_share_one_read_per_unique_chunk(tmp_path):
+    """Two cold-starts whose manifests overlap perform exactly one store
+    read per unique chunk between them (cache + per-chunk single-flight)."""
+    a = make_mem(tmp_path, "ca_fn", [page(70), page(71), page(72)])
+    b = make_mem(tmp_path, "cb_fn", [page(71), page(72), page(73)])
+    write_record(a, [0, 1, 2], fmt="cas")
+    write_record(b, [0, 1, 2], fmt="cas")
+    # a fresh store instance on the same directory: cold read cache, same
+    # persisted index/chunk file (the registry instance's writes are
+    # durable at commit time)
+    cold = pagestore.PageStore(str(tmp_path))
+    try:
+        man_a = pagestore.read_manifest(ws_path(a))
+        man_b = pagestore.read_manifest(ws_path(b))
+        union = set(man_a["chunks"]) | set(man_b["chunks"])
+        barrier = threading.Barrier(2)
+        out: dict[str, bytes] = {}
+        errs: list[BaseException] = []
+
+        def reader(key, chunks):
+            try:
+                barrier.wait()
+                out[key] = cold.read_chunks(chunks)
+            except BaseException as e:           # surfaced by the assert
+                errs.append(e)
+
+        ts = [threading.Thread(target=reader, args=("a", man_a["chunks"])),
+              threading.Thread(target=reader, args=("b", man_b["chunks"]))]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errs
+        assert out["a"] == page(70) + page(71) + page(72)
+        assert out["b"] == page(71) + page(72) + page(73)
+        assert cold.stats()["chunk_reads"] == len(union) == 4
+    finally:
+        cold.close()
+
+
+def test_dropped_chunks_surface_as_missing_record(tmp_path):
+    """A §7.2 drop racing a cold start must look like a vanished record
+    (FileNotFoundError), not a KeyError from store internals."""
+    base = make_mem(tmp_path, "race_fn", [page(80)])
+    write_record(base, [0], fmt="cas")
+    man = pagestore.read_manifest(ws_path(base))
+    store_of(base).release_manifest(man["chunks"])   # chunks GC'd under us
+    with pytest.raises(FileNotFoundError):
+        reap_mod._read_ws(base, CFG)
+
+
+# -- crash-leftover hygiene --------------------------------------------
+
+
+def _strand_tmps(base: str) -> list[str]:
+    tmps = [ws_path(base) + ".tmp", trace_path(base) + ".tmp.npy",
+            cut_path(base) + ".tmp"]
+    for p in tmps:
+        with open(p, "wb") as f:
+            f.write(b"stranded")
+    return tmps
+
+
+def test_write_record_sweeps_stale_tmps(tmp_path):
+    base = make_mem(tmp_path, "sweep_fn", [page(90)])
+    tmps = _strand_tmps(base)
+    write_record(base, [0], fmt="cas")
+    for p in tmps:
+        assert not os.path.exists(p)
+    assert has_record(base)                      # the sweep spared the record
+
+
+def test_drop_record_sweeps_stale_tmps(tmp_path):
+    base = make_mem(tmp_path, "dsweep_fn", [page(91)])
+    write_record(base, [0], fmt="cas")
+    tmps = _strand_tmps(base)
+    drop_record(base)
+    for p in tmps:
+        assert not os.path.exists(p)
+    assert not has_record(base)
+    assert reap_mod._sweep_tmp(base) == 0        # idempotent when clean
+
+
+# -- hot-prefix knee baseline ------------------------------------------
+
+
+def test_choose_hot_prefix_excludes_winner_from_baseline():
+    """The knee gap must not inflate its own median baseline: on a short
+    trace the winner shifting the median suppressed legitimate cuts."""
+    # 8 samples -> window gaps at i=1..6: [.01, .01, .04, .1, .01, .04].
+    # Median WITH the winner is .04 (8x bar = .32 > .1 -> no cut, the old
+    # bug); median of the OTHERS is .01 (bar = .08 < .1 -> knee at i=4).
+    times = [0.0, 0.01, 0.02, 0.06, 0.16, 0.17, 0.21, 0.215]
+    assert choose_hot_prefix(times) == 4
+
+
+def test_choose_hot_prefix_absolute_floor_still_holds():
+    # same shape shrunk 50x: the "knee" is scheduler noise (< min_gap_s)
+    times = [t / 50 for t in
+             [0.0, 0.01, 0.02, 0.06, 0.16, 0.17, 0.21, 0.215]]
+    assert choose_hot_prefix(times) is None

@@ -126,12 +126,17 @@ def test_write_record_dedup_preserves_order(tmp_path_factory, trace):
     expected = list(dict.fromkeys(trace))
     assert list(got) == expected
     assert nbytes == len(expected) * PAGE
-    # WS file contents = pages in trace order
-    with open(reap_mod.ws_path(gm.base), "rb") as f:
-        ws = f.read()
+    # reassembled WS = pages in trace order (chunk-store round trip)
+    pages, ws = reap_mod._read_ws(gm.base, reap_mod.ReapConfig(o_direct=False))
+    assert pages == expected
     for i, p in enumerate(expected):
         assert ws[i * PAGE:(i + 1) * PAGE] == bytes(
             arrays["params/big"][p * PAGE:(p + 1) * PAGE])
+    # the legacy flat format lays the same bytes out contiguously on disk
+    reap_mod.write_record(gm.base, trace, fmt="flat")
+    with open(reap_mod.ws_path(gm.base), "rb") as f:
+        flat = f.read()
+    assert flat == ws
 
 
 @settings(max_examples=10, deadline=None)
