@@ -134,9 +134,12 @@ class PageStore:
         self.compact_min_bytes = compact_min_bytes
         self._mu = threading.Lock()        # index/cache/stats; no I/O under it
         self._write_mu = threading.Lock()  # serializes mutators; outer lock
-        self._fds: list[int] = []          # every data fd ever opened (close())
+        self._fds: list[int] = []          # open data fds (close()/finalize)
         self._fd = os.open(self.data_path, os.O_RDWR | os.O_CREAT, 0o644)
         self._fds.append(self._fd)
+        self._fd_gen = 0                   # bumped when compaction swaps fds
+        self._gen_readers: dict[int, int] = {}   # fd gen -> active readers
+        self._retired_fds: dict[int, list[int]] = {}  # fd gen -> close pending
         # a SEPARATE O_DIRECT read fd: setting the flag on a dup of the
         # write fd would poison it too (dup'd fds share the open file
         # description), making every later unaligned pwrite fail EINVAL
@@ -212,12 +215,16 @@ class PageStore:
 
     def commit_manifest(self, hashes: list[str],
                         blocks: dict[str, bytes],
-                        prior: list[str] | None = None) -> tuple[int, int]:
+                        *, delta: bool = False) -> tuple[int, int]:
         """Atomically publish one manifest's chunks: append the chunks the
-        store doesn't hold, incref every unique chunk of the new manifest
-        and decref the ``prior`` manifest's (a delta re-record in one
-        step, so a concurrent ``release_manifest`` of a sharing function
-        can never GC a chunk between its write and its incref).
+        store doesn't hold and incref every unique chunk, write + incref
+        in one mutator step so a concurrent ``release_manifest`` of a
+        sharing function can never GC a chunk between the two.  A delta
+        re-record (``delta=True``, counted as ``delta_chunks``) must
+        release the superseded manifest's refs via ``release_manifest``
+        only AFTER its own manifest pointer is durable on disk — a crash
+        in between then leaves a readable record and at worst a leaked
+        incref, never a live manifest whose chunks were GC'd.
 
         Returns ``(n_new, n_dedup)``: chunks appended vs already present.
         """
@@ -237,7 +244,6 @@ class PageStore:
                     raise ValueError(
                         f"chunk {h} is {len(blk)} bytes, want {PAGE}")
                 os.pwrite(fd, blk, offsets[h])
-            freed = 0
             with self._mu:
                 for h in new:
                     self._index[h] = [offsets[h], 0]
@@ -246,18 +252,14 @@ class PageStore:
                     self._index[h][1] += 1
                 self._logical_bytes += len(hashes) * PAGE
                 self._manifests += 1
-                if prior:
-                    freed = self._release_locked(prior)
                 self._gen += 1
                 self.chunk_writes += len(new)
                 self.dedup_hits += len(uniq) - len(new)
-                if prior is not None:
+                if delta:
                     self.delta_chunks += len(new)
             TELEMETRY.inc("pagestore.chunk_writes", len(new))
             TELEMETRY.inc("pagestore.dedup_hits", len(uniq) - len(new))
             self._persist_index()
-        if freed:
-            self._maybe_compact()
         return len(new), len(uniq) - len(new)
 
     def _release_locked(self, hashes: list[str]) -> int:
@@ -322,8 +324,8 @@ class PageStore:
             waits: list[threading.Event] = []
             rest: list[str] = []
             claimed: list[tuple[str, int]] = []
+            missing: str | None = None
             with self._mu:
-                fd, dfd = self._fd, self._dfd
                 for h in pending:
                     blk = self._cache.get(h)
                     if blk is not None:
@@ -339,9 +341,21 @@ class PageStore:
                         continue
                     ent = self._index.get(h)
                     if ent is None:
-                        raise KeyError(f"chunk {h} not in page store")
+                        missing = h
+                        break
                     self._inflight[h] = threading.Event()
                     claimed.append((h, ent[0]))
+                if missing is not None:
+                    # the raise must not strand this pass's claims: no
+                    # waiter can have seen them yet (registered under this
+                    # same lock hold), so pop + set before surfacing
+                    for ch, _ in claimed:
+                        ev = self._inflight.pop(ch, None)
+                        if ev is not None:
+                            ev.set()
+                    raise KeyError(f"chunk {missing} not in page store")
+                if claimed:
+                    fd, dfd, fgen = self._acquire_read_locked()
             if claimed:
                 try:
                     offs = [off for _, off in claimed]
@@ -352,6 +366,7 @@ class PageStore:
                             self._cache_put(h, blk)
                         self.chunk_reads += len(claimed)
                 finally:
+                    self._release_read(fgen)
                     with self._mu:
                         events = [self._inflight.pop(h, None)
                                   for h, _ in claimed]
@@ -362,6 +377,38 @@ class PageStore:
                 ev.wait()
             pending = rest
         return b"".join(out[h] for h in hashes)
+
+    def _acquire_read_locked(self) -> tuple[int, int | None, int]:
+        """Snapshot ``(fd, dfd, fd-generation)`` for a read and pin the
+        generation: a concurrent compaction swap defers closing the
+        retired fds until the last pinned reader releases (caller holds
+        ``_mu``)."""
+        g = self._fd_gen
+        self._gen_readers[g] = self._gen_readers.get(g, 0) + 1
+        return self._fd, self._dfd, g
+
+    def _release_read(self, gen: int) -> None:
+        """Unpin one read of fd generation ``gen``; the last reader of a
+        retired generation closes its fds (bounding open fds at two per
+        *live* generation instead of two per compaction ever run)."""
+        close: list[int] = []
+        with self._mu:
+            n = self._gen_readers.get(gen, 0) - 1
+            if n > 0:
+                self._gen_readers[gen] = n
+            else:
+                self._gen_readers.pop(gen, None)
+                close = self._retired_fds.pop(gen, [])
+                for fd in close:
+                    try:
+                        self._fds.remove(fd)
+                    except ValueError:
+                        pass
+        for fd in close:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
 
     def _cache_put(self, h: str, blk: bytes) -> None:
         # caller holds _mu; never evict the entry just inserted
@@ -407,7 +454,14 @@ class PageStore:
                     rfd = fd             # O_DIRECT refused: go buffered
                     continue
                 if r <= 0:
-                    break
+                    # EOF mid-span == truncated/corrupt data file; silently
+                    # serving the rest of the anonymous mmap would restore
+                    # zero-filled guest memory
+                    mv.release()
+                    buf.close()
+                    raise IOError(
+                        f"short read in {self.data_path}: wanted "
+                        f"{n_bytes} bytes at offset {start}, got {got}")
                 got += r
             for i in range(n):
                 blocks[start + i * PAGE] = bytes(
@@ -434,15 +488,20 @@ class PageStore:
         """Rewrite ``chunks.data`` with live chunks only.  Optimistic: the
         bulk copy runs outside the locks; the swap commits only when no
         writer raced it (generation check), else it retries.  Readers
-        mid-flight keep their snapshot fd (retired, closed on close())."""
+        mid-flight keep their pinned snapshot fds; the retired generation
+        is closed as soon as its last reader releases."""
         for _ in range(4):
             with self._mu:
                 snap = sorted((off, h)
                               for h, (off, _refs) in self._index.items())
                 gen = self._gen
-                fd = self._fd
-            blks = (self._read_offsets(fd, [off for off, _ in snap], False)
-                    if snap else [])
+                fd, _dfd, fgen = self._acquire_read_locked()
+            try:
+                blks = (self._read_offsets(fd, [off for off, _ in snap],
+                                           False)
+                        if snap else [])
+            finally:
+                self._release_read(fgen)
             tmp = self.data_path + ".tmp"
             tfd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
             new_off: dict[str, int] = {}
@@ -455,23 +514,43 @@ class PageStore:
             finally:
                 os.close(tfd)
             with self._write_mu:
+                to_close: list[int] = []
                 with self._mu:
                     if self._gen != gen:
                         raced = True
                     else:
                         raced = False
                         os.replace(tmp, self.data_path)
+                        old_fds = [f for f in (self._fd, self._dfd)
+                                   if f is not None]
                         nfd = os.open(self.data_path, os.O_RDWR)
                         self._fds.append(nfd)
                         self._fd = nfd
-                        # readers mid-flight keep the retired fds (closed
-                        # on close()); new reads get the new generation
                         self._dfd = self._open_direct()
+                        # retire the old generation: readers mid-flight
+                        # pinned it and the last _release_read closes it;
+                        # with no pinned reader it closes right here
+                        old_gen = self._fd_gen
+                        self._fd_gen += 1
+                        if self._gen_readers.get(old_gen):
+                            self._retired_fds[old_gen] = old_fds
+                        else:
+                            to_close = old_fds
+                            for f in to_close:
+                                try:
+                                    self._fds.remove(f)
+                                except ValueError:
+                                    pass
                         for h, noff in new_off.items():
                             self._index[h][0] = noff
                         self._data_end = pos
                         self._dead_bytes = 0
                         self.compactions += 1
+                for f in to_close:
+                    try:
+                        os.close(f)
+                    except OSError:
+                        pass
                 if not raced:
                     self._persist_index()
                     TELEMETRY.inc("pagestore.compactions")
@@ -520,6 +599,10 @@ class PageStore:
         with self._mu:
             self._cache.clear()
             self._cache_bytes = 0
+            # _close_fds owns every remaining fd now; a straggling
+            # _release_read must not close (possibly reused) fd numbers
+            self._retired_fds.clear()
+            self._gen_readers.clear()
         _close_fds(self._fds)
 
 

@@ -251,6 +251,20 @@ def read_hot_prefix(base: str) -> int | None:
         return None
 
 
+# Record mutations for one base are serialized: two concurrent write_record
+# calls would otherwise each read the same prior manifest and double-release
+# its chunk refs — a chunk shared with a third live manifest could hit
+# refcount zero and be GC'd while still referenced.  Bounded by the number
+# of distinct recorded functions.
+_RECORD_LOCKS: dict[str, threading.Lock] = {}
+_RECORD_LOCKS_MU = threading.Lock()
+
+
+def _record_lock(base: str) -> threading.Lock:
+    with _RECORD_LOCKS_MU:
+        return _RECORD_LOCKS.setdefault(base, threading.Lock())
+
+
 def _sweep_tmp(base: str) -> int:
     """Remove crash leftovers of an interrupted ``write_record``: a failure
     between a ``.tmp`` write and its ``os.replace`` strands the temp file
@@ -295,7 +309,6 @@ def write_record(base: str, trace: list[int],
     functions are stored once.  ``fmt="flat"`` keeps the legacy
     contiguous WS file.  ``ws_bytes`` is the logical WS size either way.
     """
-    _sweep_tmp(base)
     seen: set[int] = set()
     pages: list[int] = []
     page_times: list[float] = []
@@ -308,38 +321,46 @@ def write_record(base: str, trace: list[int],
     arr = np.asarray(pages, dtype=np.int64)
     src = PageSource(base + ".mem", o_direct=False)
     try:
-        prior = pagestore.read_manifest(ws_path(base))
-        if fmt == "flat":
-            _write_ws_flat(base, pages, src)
-            if prior is not None:
-                # format downgrade: the flat file replaced a manifest, so
-                # its chunk references must not pin store bytes forever
+        with _record_lock(base):
+            _sweep_tmp(base)
+            prior = pagestore.read_manifest(ws_path(base))
+            if fmt == "flat":
+                _write_ws_flat(base, pages, src)
+                if prior is not None:
+                    # format downgrade: the flat file replaced a manifest,
+                    # so its chunk refs must not pin store bytes forever
+                    store = pagestore.get_store(os.path.dirname(base) or ".")
+                    store.release_manifest(prior["chunks"])
+            else:
+                blocks: dict[str, bytes] = {}
+                hashes: list[str] = []
+                for p in pages:
+                    blk = src.read_span(p * PAGE, PAGE)
+                    h = pagestore.chunk_hash(blk)
+                    hashes.append(h)
+                    blocks.setdefault(h, blk)
                 store = pagestore.get_store(os.path.dirname(base) or ".")
-                store.release_manifest(prior["chunks"])
-        else:
-            blocks: dict[str, bytes] = {}
-            hashes: list[str] = []
-            for p in pages:
-                blk = src.read_span(p * PAGE, PAGE)
-                h = pagestore.chunk_hash(blk)
-                hashes.append(h)
-                blocks.setdefault(h, blk)
-            store = pagestore.get_store(os.path.dirname(base) or ".")
-            store.commit_manifest(
-                hashes, blocks,
-                prior=prior["chunks"] if prior is not None else None)
-            pagestore.write_manifest(ws_path(base), pages, hashes)
-        np.save(trace_path(base) + ".tmp.npy", arr)
-        os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
-        if len(page_times) == len(pages) and pages:
-            cut = choose_hot_prefix(page_times)
-            if cut is not None:
-                with open(cut_path(base) + ".tmp", "w") as f:
-                    f.write(json.dumps({"hot_pages": cut,
-                                        "n_pages": len(pages)}))
-                os.replace(cut_path(base) + ".tmp", cut_path(base))
-            elif os.path.exists(cut_path(base)):
-                os.remove(cut_path(base))  # stale knee from a prior record
+                store.commit_manifest(hashes, blocks,
+                                      delta=prior is not None)
+                pagestore.write_manifest(ws_path(base), pages, hashes)
+                if prior is not None:
+                    # release the superseded manifest's refs only now that
+                    # f.ws durably points at the new one: a crash anywhere
+                    # above leaves a readable record (old or new) and at
+                    # worst a leaked incref, never a live manifest whose
+                    # unique chunks were GC'd
+                    store.release_manifest(prior["chunks"])
+            np.save(trace_path(base) + ".tmp.npy", arr)
+            os.replace(trace_path(base) + ".tmp.npy", trace_path(base))
+            if len(page_times) == len(pages) and pages:
+                cut = choose_hot_prefix(page_times)
+                if cut is not None:
+                    with open(cut_path(base) + ".tmp", "w") as f:
+                        f.write(json.dumps({"hot_pages": cut,
+                                            "n_pages": len(pages)}))
+                    os.replace(cut_path(base) + ".tmp", cut_path(base))
+                elif os.path.exists(cut_path(base)):
+                    os.remove(cut_path(base))  # stale knee, prior record
         WS_CACHE.invalidate(base)  # a fresh record obsoletes cached WS pages
         _broadcast_invalidation(base)
     finally:
@@ -350,16 +371,17 @@ def write_record(base: str, trace: list[int],
 def drop_record(base: str) -> None:
     WS_CACHE.invalidate(base)
     _broadcast_invalidation(base)
-    _sweep_tmp(base)
-    man = pagestore.read_manifest(ws_path(base))
-    if man is not None:
-        # release this manifest's chunk references; chunks shared with
-        # other functions' manifests survive, orphans are GC'd
-        store = pagestore.get_store(os.path.dirname(base) or ".")
-        store.release_manifest(man["chunks"])
-    for p in (trace_path(base), ws_path(base), cut_path(base)):
-        if os.path.exists(p):
-            os.remove(p)
+    with _record_lock(base):
+        _sweep_tmp(base)
+        man = pagestore.read_manifest(ws_path(base))
+        if man is not None:
+            # release this manifest's chunk references; chunks shared with
+            # other functions' manifests survive, orphans are GC'd
+            store = pagestore.get_store(os.path.dirname(base) or ".")
+            store.release_manifest(man["chunks"])
+        for p in (trace_path(base), ws_path(base), cut_path(base)):
+            if os.path.exists(p):
+                os.remove(p)
 
 
 def _read_ws_flat(base: str, cfg: ReapConfig,

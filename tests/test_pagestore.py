@@ -253,6 +253,78 @@ def test_concurrent_readers_share_one_read_per_unique_chunk(tmp_path):
         cold.close()
 
 
+def test_missing_chunk_never_strands_inflight_claims(tmp_path):
+    """Regression: a KeyError mid-claim used to leave the pass's earlier
+    claims registered as in-flight Events that nothing would ever set, so
+    any later reader of those chunks blocked forever in ev.wait()."""
+    base = make_mem(tmp_path, "strand_fn", [page(75), page(76)])
+    write_record(base, [0, 1], fmt="cas")
+    man = pagestore.read_manifest(ws_path(base))
+    store = store_of(base)
+    # claim order == hash order: present chunks are claimed before the
+    # missing one raises
+    with pytest.raises(KeyError):
+        store.read_chunks(man["chunks"] + ["0" * 32])
+    assert store._inflight == {}                 # nothing left claimed
+    done: list[bytes] = []
+    t = threading.Thread(
+        target=lambda: done.append(store.read_chunks(man["chunks"])))
+    t.start()
+    t.join(5)
+    assert not t.is_alive()                      # no wedged follower
+    assert done == [page(75) + page(76)]
+
+
+def test_short_read_raises_instead_of_zero_filling(tmp_path):
+    """Regression: a truncated/corrupt chunks.data used to be served as
+    zero-filled pages (the untouched tail of the anonymous mmap buffer)
+    instead of failing the restore."""
+    base = make_mem(tmp_path, "trunc_fn", [page(77), page(78)])
+    write_record(base, [0, 1], fmt="cas")
+    store = store_of(base)
+    with open(store.data_path, "r+b") as f:
+        f.truncate(PAGE)                         # second chunk now EOF
+    man = pagestore.read_manifest(ws_path(base))
+    with pytest.raises(OSError, match="short read"):
+        store.read_chunks(man["chunks"])
+    assert store._inflight == {}                 # error path cleaned up
+
+
+def test_compaction_closes_retired_fds(tmp_path):
+    """Regression: every compaction appended a fresh data fd (plus an
+    O_DIRECT one) and kept the retired generation open until close() —
+    unbounded fd growth in a long-lived process."""
+    store = pagestore.PageStore(str(tmp_path / "fdps"),
+                                compact_min_bytes=PAGE)
+    try:
+        def churn(t1, t2):
+            """Commit a 2-chunk manifest and release it: dead (2 pages)
+            outweighs live (1 page), so the release compacts."""
+            dead = [pagestore.chunk_hash(page(t)) for t in (t1, t2)]
+            store.commit_manifest(dead, {h: page(t) for h, t
+                                         in zip(dead, (t1, t2))})
+            store.release_manifest(dead)
+
+        keep = [pagestore.chunk_hash(page(85))]
+        store.commit_manifest(keep, {keep[0]: page(85)})
+        for t in range(100, 112, 2):             # 6 compaction cycles
+            churn(t, t + 1)
+        assert store.stats()["compactions"] >= 6
+        assert len(store._fds) <= 2              # current fd + dfd only
+        assert store.read_chunks(keep) == page(85)
+
+        # a pinned reader defers the close to its own release
+        with store._mu:
+            fd, _dfd, gen = store._acquire_read_locked()
+        churn(120, 121)                          # compacts under the pin
+        assert store.stats()["compactions"] >= 7
+        assert fd in store._fds                  # still open for the reader
+        store._release_read(gen)
+        assert fd not in store._fds              # last release closed it
+    finally:
+        store.close()
+
+
 def test_dropped_chunks_surface_as_missing_record(tmp_path):
     """A §7.2 drop racing a cold start must look like a vanished record
     (FileNotFoundError), not a KeyError from store internals."""
@@ -262,6 +334,76 @@ def test_dropped_chunks_surface_as_missing_record(tmp_path):
     store_of(base).release_manifest(man["chunks"])   # chunks GC'd under us
     with pytest.raises(FileNotFoundError):
         reap_mod._read_ws(base, CFG)
+
+
+# -- re-record crash ordering / serialization --------------------------
+
+
+def test_failed_manifest_write_leaves_old_record_readable(tmp_path,
+                                                          monkeypatch):
+    """Regression: a re-record used to release the prior manifest's chunk
+    refs before f.ws pointed at the new manifest — a crash in between
+    left the on-disk record referencing GC'd chunks.  Now the old record
+    must survive a failure at the manifest-write step."""
+    base = make_mem(tmp_path, "crash_fn", [page(130), page(131)])
+    write_record(base, [0, 1], fmt="cas")
+    with open(base + ".mem", "r+b") as f:        # new content for the redo
+        f.write(page(132))
+
+    def boom(path, pages, chunks, **kw):
+        raise RuntimeError("crash between commit and manifest write")
+
+    monkeypatch.setattr(pagestore, "write_manifest", boom)
+    with pytest.raises(RuntimeError):
+        write_record(base, [0, 1], fmt="cas")
+    monkeypatch.undo()
+    # f.ws still names the prior manifest and its chunks are still alive
+    _, data = reap_mod._read_ws(base, CFG)
+    assert data == page(130) + page(131)
+
+
+def test_concurrent_rerecord_and_drop_serialize(tmp_path, monkeypatch):
+    """Regression: record mutations for one base are serialized by a
+    per-base lock — a drop overlapping a re-record used to release the
+    same prior manifest twice, GC'ing chunks a third function still
+    referenced."""
+    shared = [page(140), page(141)]
+    a = make_mem(tmp_path, "ser_a", shared)
+    b = make_mem(tmp_path, "ser_b", shared)
+    write_record(a, [0, 1], fmt="cas")
+    write_record(b, [0, 1], fmt="cas")
+    store = store_of(a)
+
+    entered = threading.Event()
+    release = threading.Event()
+    real = pagestore.write_manifest
+
+    def slow_write(path, pages, chunks, **kw):
+        entered.set()
+        release.wait(10)
+        return real(path, pages, chunks, **kw)
+
+    monkeypatch.setattr(pagestore, "write_manifest", slow_write)
+    t1 = threading.Thread(target=write_record, args=(a, [0, 1]),
+                          kwargs={"fmt": "cas"})
+    t1.start()
+    assert entered.wait(10)                      # t1 holds a's record lock
+    t2 = threading.Thread(target=drop_record, args=(a,))
+    t2.start()
+    t2.join(0.3)
+    assert t2.is_alive()                         # drop queued behind it
+    assert has_record(a)                         # nothing yanked mid-write
+    release.set()
+    t1.join(10)
+    t2.join(10)
+    assert not t1.is_alive() and not t2.is_alive()
+    assert not has_record(a)                     # drop won in the end
+    # b's WS shares every chunk with a's dropped record: exactly one
+    # release of a's refs must have reached them, never two
+    _, data = reap_mod._read_ws(b, CFG)
+    assert data == shared[0] + shared[1]
+    man_b = pagestore.read_manifest(ws_path(b))
+    assert all(store._index[h][1] == 1 for h in man_b["chunks"])
 
 
 # -- crash-leftover hygiene --------------------------------------------
