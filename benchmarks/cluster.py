@@ -38,6 +38,13 @@ Experiments (identical replayed traces across arms):
     from its owners (the manifest wire ships only chunks the requester's
     L1 is missing from *any* function; the flat arm reproduces the
     pre-manifest protocol where every byte ships).
+  * **Transport A/B** — the real socket data plane (repro.transport)
+    against the in-process modeled one: a bare PageServer/PageClient
+    pull matrix (shm vs inline vs compressed, byte-parity checked) plus
+    a 2-node ``build_fleet(transport="socket")`` fleet replaying the
+    same force-cold waves as its inproc twin.  Gates: socket cold p95
+    within 2x of inproc, compressed wire strictly below raw, logits
+    byte-identical across the process boundary.
 
 ``--quick`` (CI) runs 4 nodes x 6 smoke functions and writes a
 ``BENCH_cluster.json`` artifact next to ``BENCH_scalability.json``.
@@ -595,11 +602,258 @@ def run_dedup_scale(*, quick: bool = False, n_nodes: int = 4,
     return out
 
 
-def write_artifact(ab: dict, kill: dict, demand: dict, dedup: dict) -> None:
+def run_transport_ab(function: str = "olmo-1b", *, quick: bool = False,
+                     verbose: bool = True) -> dict:
+    """Real-transport A/B (PR 10): the socket data plane vs the modeled one.
+
+    Two subsections:
+
+    * **pull** — a bare PageServer/PageClient pair pulling fabricated
+      low-entropy WS records (compressible, like real guest memory — an
+      all-random WS would make any codec look useless).  Arms: ``inproc``
+      (direct in-heap read + chunk-hash verify, the no-wire floor),
+      ``socket_shm`` (descriptors on the socket, bytes through shared
+      memory), ``socket_inline`` (raw chunks on the socket), and
+      ``socket_compress`` (codec'd chunks on the socket).  Every arm's
+      reassembled blob must be byte-identical to the source record, the
+      shm arm's ``install_block`` view must match it too, and the
+      compressed arm must put strictly fewer bytes on the wire than raw.
+    * **e2e** — two 2-node fleets on the identical store and invocation
+      sequence, ``build_fleet(transport="inproc")`` vs ``"socket"``.
+      After a scale-to-zero + cache-clear + rebalance quiesce, replay
+      ``reps`` concurrent force-cold waves; the socket fleet's cold p95
+      must stay within 2x of the inproc fleet's, and the logits coming
+      back over the process boundary must be byte-identical to the
+      in-process ones.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import pagestore
+    from repro.core.reap import PAGE
+    from repro.transport import PageClient, PageServer, shm_available
+
+    out: dict = {}
+
+    # -- pull: bare wire protocol over fabricated low-entropy records -----
+    n_rec = 4 if quick else 8
+    n_pages = 192 if quick else 512          # 768KB/2MB WS >> inline_max
+    reps = 3 if quick else 5
+    records: dict[str, tuple[list[int], bytes, list[str]]] = {}
+    for i in range(n_rec):
+        rng = np.random.default_rng(4200 + i)
+        # 64-byte runs from a 4-symbol alphabet: entropy ~2 bits/byte at
+        # the run level, far below the codec's skip threshold
+        pages = np.repeat(rng.integers(0, 4, size=(n_pages, 64),
+                                       dtype=np.uint8), PAGE // 64, axis=1)
+        data = pages.tobytes()
+        hashes = [pagestore.chunk_hash(data[j * PAGE:(j + 1) * PAGE])
+                  for j in range(n_pages)]
+        records[f"tp_rec_{i}"] = (list(range(n_pages)), data, hashes)
+    serve = records.get
+
+    class _CaptureArena:
+        block = None
+
+        def install_block(self, pages, block):
+            self.block = np.array(block, copy=True)
+
+    if verbose:
+        print(f"\n-- transport A/B: pull ({n_rec} records x {n_pages} "
+              f"pages x {reps} reps) --")
+    sock_root = os.path.join(common.ensure_store(), "transport_sock")
+    os.makedirs(sock_root, exist_ok=True)
+    pull: dict = {}
+    lat: dict[str, list[float]] = {}
+
+    # the no-wire floor: read the record from the in-heap dict and pay
+    # only the chunk-hash verification the client arms also pay
+    lat["inproc"] = []
+    for _ in range(reps):
+        for base, (pages, data, hashes) in records.items():
+            t0 = time.perf_counter()
+            _p, blob, hs = serve(base)
+            ok = all(pagestore.chunk_hash(blob[j * PAGE:(j + 1) * PAGE])
+                     == hs[j] for j in range(len(hs)))
+            lat["inproc"].append(time.perf_counter() - t0)
+            assert ok
+    pull["inproc"] = {"wire_bytes": 0, "shm_bytes": 0}
+
+    arms = {"socket_shm": dict(use_shm=True, compress=False),
+            "socket_inline": dict(use_shm=False, compress=False),
+            "socket_compress": dict(use_shm=False, compress=True)}
+    if not shm_available():
+        arms.pop("socket_shm")
+    for arm, knobs in arms.items():
+        path = os.path.join(sock_root, f"{arm}.sock")
+        server = PageServer(path, serve, **knobs)
+        client = PageClient(path)
+        lat[arm] = []
+        parity = True
+        try:
+            for _ in range(reps):
+                for base, (_pages, data, _hashes) in records.items():
+                    t0 = time.perf_counter()
+                    res = client.fetch(base)
+                    lat[arm].append(time.perf_counter() - t0)
+                    parity &= res is not None and res.assemble() == data
+            install_parity = None
+            if arm == "socket_shm":
+                cap = _CaptureArena()
+                base0 = next(iter(records))
+                client.fetch_install(base0, cap)
+                install_parity = (cap.block is not None
+                                  and cap.block.tobytes()
+                                  == records[base0][1])
+            cs = client.stats.as_dict()
+            pull[arm] = {
+                "wire_bytes": cs["wire_tx_bytes"] + cs["wire_rx_bytes"],
+                "shm_bytes": cs["shm_bytes"],
+                "inline_bytes": cs["inline_bytes"],
+                "compress_ratio": round(server.codec.as_dict()
+                                        ["compress_ratio"], 3),
+                "parity": parity,
+            }
+            if install_parity is not None:
+                pull[arm]["install_parity"] = install_parity
+        finally:
+            client.close()
+            server.close()
+        assert parity, f"{arm}: reassembled WS differs from source record"
+    from repro.serving import percentile
+    logical = n_rec * n_pages * PAGE * reps
+    for arm, samples in lat.items():
+        pull.setdefault(arm, {})
+        pull[arm]["pull_p50_s"] = round(percentile(samples, 50), 6)
+        pull[arm]["pull_p95_s"] = round(percentile(samples, 95), 6)
+        if verbose:
+            w = pull[arm].get("wire_bytes", 0)
+            print(f"  {arm:16s} p50={pull[arm]['pull_p50_s']*1e3:6.2f}ms "
+                  f"p95={pull[arm]['pull_p95_s']*1e3:6.2f}ms "
+                  f"wire={w/1e6:7.3f}MB "
+                  f"shm={pull[arm].get('shm_bytes', 0)/1e6:7.3f}MB")
+    pull["logical_bytes"] = logical
+    assert pull["socket_compress"]["wire_bytes"] < \
+        pull["socket_inline"]["wire_bytes"], (
+            "codec'd stream put no fewer bytes on the wire than raw")
+    if "socket_shm" in pull:
+        assert pull["socket_shm"]["install_parity"], (
+            "shm install_block view differs from the source record")
+    out["pull"] = pull
+
+    # -- e2e: 2-node fleets, identical store + trace, inproc vs socket ----
+    from repro.cluster import ScheduleConfig, TransferModel, build_fleet
+    from repro.configs import SMOKES
+    from repro.serving import PolicyConfig, RouterConfig, ServeConfig
+
+    cfg = SMOKES[function] if quick else common.bench_functions()[function]
+    store_dir = common.ensure_store()
+    request = common.make_request(cfg, seed=1)
+    prefix = "tpq" if quick else "tp"
+    n_fns = 4 if quick else 6
+    waves = 3 if quick else 5
+    names = [f"{prefix}_{function}_{i}" for i in range(n_fns)]
+    if verbose:
+        print(f"\n-- transport A/B: e2e (2 nodes x {n_fns} fns x "
+              f"{waves} force-cold waves) --")
+    e2e: dict = {}
+    logits: dict[str, bytes] = {}
+    for transport in ("inproc", "socket"):
+        common.drop_caches()
+        serve_cfg = ServeConfig(
+            keepalive_s=2.0, warm_limit=4,
+            router=RouterConfig(max_concurrency=2,
+                                max_instances_per_function=2,
+                                queue_depth=256, batch_restore_limit=8),
+            policy=PolicyConfig(interval_s=0.05, window_s=2.0, max_warm=4,
+                                min_keepalive_s=0.5),
+            transfer=TransferModel(latency_s=1e-3, gbps=1.0),
+            transport=transport, transport_compress=True)
+        cluster = build_fleet(
+            2, store_dir, config=serve_cfg,
+            cfg=ScheduleConfig(placement="locality", seed=42),
+            cache_capacity_bytes=256 << 20)
+        try:
+            for i, name in enumerate(names):
+                cluster.register(name, cfg, seed=i,
+                                 warmup_batch=request if i == 0 else None)
+            for name in names:
+                cluster.invoke(name, request)     # record wave: WS on disk
+            cluster.drain(timeout=120)
+            if hasattr(cluster, "clear_caches"):  # socket fleet
+                for name in names:
+                    cluster.scale_to_zero(name)
+                cluster.clear_caches()
+            else:
+                for node in cluster.nodes.values():
+                    for name in names:
+                        node.orch.scale_to_zero(name)
+                    if node.ws_cache is not None:
+                        node.ws_cache.clear()
+            cluster.rebalance()
+            cluster.reset_stats()
+            reports = []
+            for w in range(waves):
+                invs = [cluster.submit(name, request, force_cold=True)
+                        for name in names]
+                for j, inv in enumerate(invs):
+                    got, rep = inv.result(timeout=180)
+                    reports.append(rep)
+                    if w == 0 and j == 0:
+                        logits[transport] = np.asarray(got).tobytes()
+            cold = [r.total_s for r in reports if r.load_vmm_s > 0]
+            arm = {
+                "served": len(reports),
+                "cold": len(cold),
+                "cold_p50_s": round(percentile(cold, 50), 6),
+                "cold_p95_s": round(percentile(cold, 95), 6),
+            }
+            st = cluster.stats()
+            if transport == "socket":
+                tr = [ns.get("transport", {})
+                      for ns in st.get("nodes", {}).values()]
+                arm["wire_mb"] = round(sum(
+                    t.get("wire_tx_bytes", 0) + t.get("wire_rx_bytes", 0)
+                    for t in tr) / 1e6, 3)
+                arm["remote_fetches"] = sum(
+                    t.get("remote_fetches", 0) for t in tr)
+                arm["origin_reads"] = sum(
+                    t.get("origin_reads", 0) for t in tr)
+            else:
+                sst = cluster.store.stats()
+                arm["remote_fetches"] = sst["remote_fetches"]
+                arm["origin_reads"] = sst["origin_reads"]
+        finally:
+            cluster.close()
+        e2e[transport] = arm
+        if verbose:
+            print(f"  {transport:8s} cold={arm['cold']:3d} "
+                  f"cold_p50={arm['cold_p50_s']*1e3:7.1f}ms "
+                  f"cold_p95={arm['cold_p95_s']*1e3:7.1f}ms "
+                  f"remote={arm['remote_fetches']}")
+    ratio = e2e["socket"]["cold_p95_s"] / max(e2e["inproc"]["cold_p95_s"],
+                                              1e-9)
+    e2e["socket_over_inproc_p95"] = round(ratio, 3)
+    e2e["logits_parity"] = logits["inproc"] == logits["socket"]
+    assert e2e["logits_parity"], (
+        "socket-fleet logits differ from the in-process fleet's")
+    assert ratio <= 2.0, (
+        f"socket cold p95 is {ratio:.2f}x inproc (budget: 2.0x)")
+    out["e2e"] = e2e
+    if verbose:
+        print(f"  socket/inproc cold p95 = {ratio:.2f}x "
+              f"(budget 2.0x), logits parity = {e2e['logits_parity']}")
+    return out
+
+
+def write_artifact(ab: dict, kill: dict, demand: dict, dedup: dict,
+                   transport: dict) -> None:
     with open(ARTIFACT, "w") as f:
         json.dump({"benchmark": "cluster", "placement_ab": ab,
                    "node_kill": kill, "demand_plane": demand,
-                   "dedup_scale": dedup}, f, indent=2)
+                   "dedup_scale": dedup, "transport_ab": transport},
+                  f, indent=2)
     print(f"\nwrote {ARTIFACT}")
 
 
@@ -624,6 +878,7 @@ def main(argv=None):
     demand = run_demand_ab(args.function, quick=args.quick,
                            n_nodes=args.nodes)
     dedup = run_dedup_scale(quick=args.quick, n_nodes=args.nodes)
+    transport = run_transport_ab(args.function, quick=args.quick)
     for tname, arms in ab.items():
         if not isinstance(arms, dict) or "locality" not in arms:
             continue
@@ -645,8 +900,16 @@ def main(argv=None):
           f"{cas['store_mb_10x']:.1f}MB cas vs {flat['store_mb_10x']:.1f}MB "
           f"flat (dedup {cas['dedup_ratio']:.1f}x); cold-node transfer "
           f"{cas['transfer_mb']:.1f}MB vs {flat['transfer_mb']:.1f}MB")
+    te = transport["e2e"]
+    print(f"\ntransport: socket fleet cold p95 "
+          f"{te['socket']['cold_p95_s']*1e3:.1f}ms vs inproc "
+          f"{te['inproc']['cold_p95_s']*1e3:.1f}ms "
+          f"({te['socket_over_inproc_p95']:.2f}x); compressed pull wire "
+          f"{transport['pull']['socket_compress']['wire_bytes']/1e6:.2f}MB "
+          f"vs raw "
+          f"{transport['pull']['socket_inline']['wire_bytes']/1e6:.2f}MB")
     if args.quick:
-        write_artifact(ab, kill, demand, dedup)
+        write_artifact(ab, kill, demand, dedup, transport)
 
 
 if __name__ == "__main__":

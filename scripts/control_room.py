@@ -23,6 +23,12 @@ Panels:
     per-function rates (``sources.cluster.demand.functions``) summed,
     against the observed fleet completion rate (derivative of the summed
     router ``completed`` counters).
+  * **Transport** — socket-fleet page-transport per node
+    (``nodes[id].transport``, repro.transport): cumulative wire bytes,
+    fetch RTT p95, and the codec's compression ratio.  Streams recorded
+    by an inproc fleet (or before the transport layer existed) carry no
+    such block; the panel degrades to a "no transport data" note rather
+    than silently vanishing.
 
 Usage: python scripts/control_room.py [--telemetry-dir results/telemetry]
                                       [--out results/telemetry/control_room.html]
@@ -86,6 +92,10 @@ def build_panels(streams: dict[str, list[dict]]) -> list[dict]:
         t0 = samples[0].get("t", 0.0)
 
         warm: dict[str, list] = {}
+        wire: dict[str, list] = {}
+        rtt95: dict[str, list] = {}
+        cratio: dict[str, list] = {}
+        saw_fleet_nodes = False
         ws_rate, l1_rate, demand_fc, demand_actual = [], [], [], []
         stages: dict[str, list] = {s: [] for s in RESTORE_STAGES}
         prev_completed = prev_t = None
@@ -110,6 +120,19 @@ def build_panels(streams: dict[str, list[dict]]) -> list[dict]:
                 if c is not None:
                     completed_total += c
                     have_completed = True
+                saw_fleet_nodes = True
+                tr = _dig(ns, "transport")
+                if isinstance(tr, dict):
+                    tx = _num(tr.get("wire_tx_bytes")) or 0
+                    rx = _num(tr.get("wire_rx_bytes")) or 0
+                    wire.setdefault(node_id, []).append([t, tx + rx])
+                    if _num(_dig(tr, "fetch_rtt_s", "count")):
+                        p95 = _num(_dig(tr, "fetch_rtt_s", "p95"))
+                        if p95 is not None:
+                            rtt95.setdefault(node_id, []).append([t, p95])
+                    cr = _num(tr.get("compress_ratio"))
+                    if cr is not None:
+                        cratio.setdefault(node_id, []).append([t, cr])
 
             hits = _num(_dig(reg, "counters", "ws_cache.hits")) or 0
             misses = _num(_dig(reg, "counters", "ws_cache.misses")) or 0
@@ -170,6 +193,34 @@ def build_panels(streams: dict[str, list[dict]]) -> list[dict]:
             panels.append({
                 "title": f"{stream}: forecast vs actual demand",
                 "unit": "rps", "series": demand_series})
+        if wire:
+            panels.append({
+                "title": f"{stream}: transport wire bytes per node",
+                "unit": "bytes",
+                "series": [{"label": nid, "points": pts}
+                           for nid, pts in sorted(wire.items())]})
+            if rtt95:
+                panels.append({
+                    "title": f"{stream}: transport fetch RTT p95 per node",
+                    "unit": "s",
+                    "series": [{"label": nid, "points": pts}
+                               for nid, pts in sorted(rtt95.items())]})
+            if cratio:
+                panels.append({
+                    "title": f"{stream}: transport compression ratio",
+                    "unit": "logical/wire",
+                    "series": [{"label": nid, "points": pts}
+                               for nid, pts in sorted(cratio.items())]})
+        elif saw_fleet_nodes:
+            # old run or inproc fleet: keep the panel slot visible so the
+            # dashboard says *why* there are no transport series
+            panels.append({
+                "title": f"{stream}: transport",
+                "unit": "",
+                "series": [],
+                "note": "no transport data — inproc fleet (modeled "
+                        "TransferModel network) or a run predating "
+                        "repro.transport"})
     return panels
 
 
@@ -235,6 +286,12 @@ const grid = document.getElementById("grid");
 for (const panel of PANELS) {{
   const div = document.createElement("div");
   div.className = "panel";
+  if (panel.note) {{
+    div.innerHTML = `<h2>${{panel.title}}</h2>` +
+      `<div style="color:#7a8699;padding:24px 0">${{panel.note}}</div>`;
+    grid.appendChild(div);
+    continue;
+  }}
   const legend = panel.series.map((s, i) =>
     `<span><i style="background:${{COLORS[i % COLORS.length]}}"></i>` +
     `${{s.label}}</span>`).join("");

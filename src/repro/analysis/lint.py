@@ -1,4 +1,4 @@
-"""Repo-invariant lint rules (REP001–REP007).
+"""Repo-invariant lint rules (REP001–REP008).
 
 These encode invariants the codebase already depends on but nothing
 enforced until now:
@@ -35,6 +35,14 @@ REP007  WS bytes are content-addressed: the ``.ws`` file may be a chunk
         legacy flat-format seam (``core/reap.py::_read_ws_flat``).
         Metadata probes (``getmtime``/``exists``) and write-mode opens
         stay legal everywhere.
+REP008  the page data plane lives behind ``src/repro/transport/``:
+        importing ``socket`` or ``multiprocessing.shared_memory``
+        anywhere else is flagged.  The rest of the tree talks chunks and
+        manifests, never file descriptors — keeping every raw-wire and
+        shared-memory touchpoint behind one seam.  (core/restore.py's
+        ``connect_handshake`` socketpair loopback predates the transport
+        layer and is accepted via the analysis baseline, not a code
+        exemption.)
 """
 from __future__ import annotations
 
@@ -91,6 +99,10 @@ REP007_READER_NAMES = {"PageSource"}
 REP007_READER_DOTTED = {("os", "open"), ("np", "memmap"), ("np", "fromfile"),
                         ("numpy", "memmap"), ("numpy", "fromfile")}
 
+# REP008: only the transport package may touch the raw data plane.
+REP008_ALLOWED_PREFIX = "transport/"
+REP008_MODULES = ("socket", "multiprocessing.shared_memory")
+
 
 def _stats_like(name: str) -> bool:
     return (name in ("stats", "metrics")
@@ -125,6 +137,38 @@ class _Linter(ast.NodeVisitor):
         self.stack.pop()
 
     visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- REP008 -----------------------------------------------------------
+
+    def _rep008(self, lineno: int, what: str) -> None:
+        self.findings.append(Finding(
+            rule="REP008", path=self.rel, line=lineno,
+            symbol=_qualname_stack(self.stack),
+            message=(f"raw data-plane import ({what}) outside "
+                     "src/repro/transport/; sockets and shared memory are "
+                     "confined behind the transport seam"),
+            detail=f"data-plane-import:{what}"))
+
+    def visit_Import(self, node: ast.Import) -> None:
+        if not self.rel.startswith(REP008_ALLOWED_PREFIX):
+            for alias in node.names:
+                if (alias.name in REP008_MODULES
+                        or alias.name.startswith("socket.")):
+                    self._rep008(node.lineno, alias.name)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if not self.rel.startswith(REP008_ALLOWED_PREFIX):
+            mod = node.module or ""
+            if (mod in REP008_MODULES or mod.startswith("socket.")
+                    or mod.startswith("multiprocessing.shared_memory.")):
+                self._rep008(node.lineno, mod)
+            elif mod == "multiprocessing":
+                for alias in node.names:
+                    if alias.name == "shared_memory":
+                        self._rep008(node.lineno,
+                                     "multiprocessing.shared_memory")
+        self.generic_visit(node)
 
     # -- REP006 -----------------------------------------------------------
 
@@ -371,7 +415,7 @@ def _module_rep004(rel: str, tree: ast.Module, src: str) -> list[Finding]:
 
 
 def analyze_lint(root: str) -> list[Finding]:
-    """Run REP001–REP007 over every ``.py`` under ``root``."""
+    """Run REP001–REP008 over every ``.py`` under ``root``."""
     findings: list[Finding] = []
     for dirpath, _dirnames, filenames in os.walk(root):
         for fn in sorted(filenames):

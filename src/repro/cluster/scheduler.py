@@ -485,7 +485,8 @@ def build_fleet(n_nodes: int, store_dir: str, *,
                 demand: DemandConfig | None = None,
                 replication: int = 1, vnodes: int = 64,
                 transfer=None, cache_capacity_bytes: int = 256 << 20,
-                **node_kw) -> ClusterRouter:
+                transport: str | None = None,
+                **node_kw):
     """Assemble ring + sharded store + N worker nodes into a ClusterRouter.
 
     ``config`` (a :class:`~repro.serving.ServeConfig`) is the recommended
@@ -495,7 +496,29 @@ def build_fleet(n_nodes: int, store_dir: str, *,
     is the pre-ServeConfig per-node kwarg form (concurrency, keepalive,
     per-node policy, ...), kept working via WorkerNode's deprecation shim.
     Nodes share ``store_dir`` as the origin snapshot store.
+
+    ``transport`` (defaults to ``config.transport``, else ``"inproc"``):
+    ``"inproc"`` builds this thread-fleet ClusterRouter with the modeled
+    :class:`~repro.cluster.snapstore.TransferModel` network;
+    ``"socket"`` builds a :class:`~repro.transport.procnode.ProcessFleet`
+    — one child process per node, WS chunks moving over Unix-domain
+    sockets / shared memory (repro.transport) — speaking the same
+    scheduling interface, so the two fleets A/B on identical traces.
     """
+    if transport is None:
+        transport = getattr(config, "transport", None) or "inproc"
+    if transport == "socket":
+        if node_kw:
+            raise TypeError(
+                "transport='socket' takes configuration via ServeConfig, "
+                f"not loose node kwargs {sorted(node_kw)}")
+        from ..transport.procnode import build_process_fleet
+        return build_process_fleet(
+            n_nodes, store_dir, config=config, cfg=cfg,
+            replication=replication, vnodes=vnodes,
+            cache_capacity_bytes=cache_capacity_bytes)
+    if transport != "inproc":
+        raise ValueError(f"unknown transport {transport!r}")
     from .shardmap import ConsistentHashRing
     ring = ConsistentHashRing(vnodes=vnodes)
     if config is not None:

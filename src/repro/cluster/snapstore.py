@@ -59,6 +59,14 @@ class TransferModel:
     bandwidth term per page.  Defaults model a ~10 GbE fabric with sub-ms
     RPC latency; benchmarks lower ``gbps`` to make tier placement visible
     at smoke-config WS sizes.
+
+    .. deprecated:: PR 10
+        This modeled sleep is the *inproc* fleet's stand-in for a copy
+        that never happens (every node shares one heap).  The
+        ``transport="socket"`` fleet (:mod:`repro.transport`) moves
+        chunks between real processes and pays real wire/shm time; it
+        does not consult this model.  Kept as the ``inproc`` seam for
+        A/B baselines.
     """
     latency_s: float = 5e-4
     gbps: float = 10.0
@@ -231,7 +239,11 @@ class ShardedSnapshotStore:
             missing = (requester.missing_chunks(hashes)
                        if requester is not None else set(hashes))
             wire_bytes = len(missing) * PAGE
-            cost = self.transfer.cost_s(wire_bytes)
+            # A fully-deduped fetch ships nothing: charging the modeled
+            # per-transfer latency for zero wire bytes would bill a
+            # network round-trip that never happens (the chunk diff is
+            # an in-memory index lookup).
+            cost = self.transfer.cost_s(wire_bytes) if wire_bytes else 0.0
             self._sleep(cost)
             with self._mu:
                 self.remote_fetches += 1

@@ -662,6 +662,31 @@ class WSCache:
         with self._lock:
             return {h for h in set(hashes) if h not in self._chunks}
 
+    def chunk_index(self) -> set[str]:
+        """Every chunk hash any cached entry holds — the L1 index digest
+        a transport requester sends so the responder ships only what is
+        actually missing here (wire.py negotiation)."""
+        with self._lock:
+            return set(self._chunks)
+
+    def chunk_payloads(self, hashes) -> dict[str, bytes]:
+        """Resolve held chunk hashes to their page bytes (best effort:
+        hashes evicted since :meth:`chunk_index` are simply absent).
+        The transport client reassembles a negotiated fetch from this —
+        chunks the responder skipped because our digest covered them."""
+        want = set(hashes)
+        out: dict[str, bytes] = {}
+        with self._lock:
+            for _mtime, _pages, data, entry_hashes in self._entries.values():
+                if not want:
+                    break
+                for i, h in enumerate(entry_hashes):
+                    if h in want:
+                        out[h] = data[i * pagestore.PAGE:
+                                      (i + 1) * pagestore.PAGE]
+                        want.discard(h)
+        return out
+
     def invalidate(self, base: str) -> bool:
         """Drop ``base``'s entry; True when an entry was actually held (the
         shard tier counts eager peer drops with this)."""

@@ -52,6 +52,14 @@ class ServeConfig:
     # telemetry.TelemetryConfig: enables the periodic StatsSnapshotter
     # (fleet-wide via build_fleet; per-node too with ``per_node=True``)
     telemetry: Optional[Any] = None
+    # -- page transport (cluster fleets; repro.transport) ----------------
+    # "inproc": threads in one heap, TransferModel-modeled copies (the
+    # deprecation seam).  "socket": process-per-node fleet moving chunks
+    # over Unix-domain sockets / shared memory (build_fleet dispatches).
+    transport: str = "inproc"
+    transport_compress: bool = False   # per-chunk wire compression (codec)
+    transport_shm: bool = True         # shm data plane when available
+    transport_inline_max: int = 64 << 10  # <= this many bytes ride inline
 
     def resolved_reap(self) -> ReapConfig:
         """The effective ReapConfig: ``reap`` with the overlap knobs

@@ -55,6 +55,29 @@ and the shard tier's ``ShardedSnapshotStore.stats``)::
     dedup_bytes_saved  WS bytes a remote fetch did NOT ship because the
                        requester already held the chunks (any function)
 
+Node transport stats (``nodes.<id>.transport`` in a socket-fleet
+``ProcessFleet.stats`` — repro.transport; absent on inproc fleets, and
+readers like scripts/control_room.py must render a placeholder then)::
+
+    wire_tx_bytes      socket bytes this node put on the wire (frames,
+                       client + server side)
+    wire_rx_bytes      socket bytes received (frames, both sides)
+    shm_bytes          chunk bytes that rode shared-memory segments
+    inline_bytes       encoded chunk bytes that rode the socket inline
+    raw_chunks         inline chunks shipped unencoded (server codec)
+    compressed_chunks  inline chunks shipped compressed
+    compress_ratio     logical / wire bytes over the codec'd stream
+                       (1.0 for an all-raw or idle stream)
+    fetch_rtt_s        {count, sum, p50, p95} of this node's WS-fetch
+                       round-trips (negotiate + ship + verify)
+    remote_fetches     L1 misses served by a peer's PageServer
+    remote_misses      owner dialed but cold (no WS entry to serve)
+    origin_reads       fetches that fell through to the origin disk
+    dead_owner_fallbacks  fetches where a dead peer (connection refused/
+                       reset) forced the origin fallback
+    chunks_served      chunks this node's PageServer shipped to peers
+    shm_responses / inline_responses  server responses by data plane
+
 Snapshotter samples (one JSON object per line, see
 :class:`repro.telemetry.StatsSnapshotter`)::
 

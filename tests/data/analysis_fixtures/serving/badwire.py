@@ -1,0 +1,15 @@
+"""REP008 fixture: raw data-plane imports outside src/repro/transport/."""
+import socket                                        # REP008: fires
+from multiprocessing import shared_memory            # REP008: fires
+
+
+def dial(path):
+    import socket.socketpair  # noqa: F401           # REP008: fires (dotted)
+    s = socket.socket(socket.AF_UNIX)
+    s.connect(path)
+    return s
+
+
+def map_segment(name):
+    seg = shared_memory.SharedMemory(name=name)
+    return seg.buf

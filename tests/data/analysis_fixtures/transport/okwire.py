@@ -1,0 +1,13 @@
+"""REP008 fixture: the transport/ prefix is the data plane's home turf."""
+import socket                                        # legal here
+from multiprocessing import shared_memory            # legal here
+
+
+def serve(path):
+    srv = socket.socket(socket.AF_UNIX)
+    srv.bind(path)
+    return srv
+
+
+def carve(n):
+    return shared_memory.SharedMemory(create=True, size=n)

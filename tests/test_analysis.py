@@ -111,6 +111,17 @@ def test_rep007_ws_byte_reads_fire(lint_findings):
     assert "legal_writer" not in flagged
 
 
+def test_rep008_data_plane_imports_fire(lint_findings):
+    hits = [f for f in lint_findings if f.rule == "REP008"]
+    details = {f.detail for f in hits}
+    assert "data-plane-import:socket" in details
+    assert "data-plane-import:multiprocessing.shared_memory" in details
+    # every hit sits outside the transport/ prefix …
+    assert all(f.path.startswith("serving/") for f in hits)
+    # … and the identical imports inside transport/ stay legal
+    assert not any(f.path.startswith("transport/") for f in hits)
+
+
 # -------------------------------------------------------------------------
 # the real tree: clean modulo the checked-in baseline
 # -------------------------------------------------------------------------

@@ -1,0 +1,178 @@
+"""Process-per-node fleet (PR 10): spawn children, move real pages.
+
+Each WorkerNode runs in its own child process with a private WSCache and
+a PageServer; the supervisor speaks the ClusterRouter scheduling
+interface.  These tests build real fleets (spawn + jax init per child),
+so everything fleet-shaped is marked slow; the build_fleet dispatch
+checks at the top are cheap and run in the default CI matrix."""
+import numpy as np
+import pytest
+
+from repro.cluster import ScheduleConfig, build_fleet
+
+
+# -- build_fleet dispatch (no processes spawned) --------------------------
+
+def test_build_fleet_rejects_loose_node_kw_for_socket(tmp_path):
+    with pytest.raises(TypeError):
+        build_fleet(2, str(tmp_path), transport="socket",
+                    max_concurrency=2)
+
+
+def test_build_fleet_unknown_transport_raises(tmp_path):
+    with pytest.raises(ValueError):
+        build_fleet(2, str(tmp_path), transport="carrier-pigeon")
+
+
+# -- real 2-node socket fleet ---------------------------------------------
+
+def _serve_config(transport: str = "socket"):
+    from repro.cluster import TransferModel
+    from repro.serving import PolicyConfig, RouterConfig, ServeConfig
+    return ServeConfig(
+        keepalive_s=2.0, warm_limit=4,
+        router=RouterConfig(max_concurrency=2,
+                            max_instances_per_function=2,
+                            queue_depth=64, batch_restore_limit=8),
+        policy=PolicyConfig(interval_s=0.05, window_s=2.0, max_warm=4,
+                            min_keepalive_s=0.5),
+        transfer=TransferModel(latency_s=1e-3, gbps=1.0),
+        transport=transport, transport_compress=True)
+
+
+@pytest.fixture(scope="module")
+def socket_fleet(tmp_path_factory):
+    import jax
+    from repro.configs import SMOKES
+    from repro.launch import steps
+
+    store_dir = str(tmp_path_factory.mktemp("pstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(0))
+    fleet = build_fleet(2, store_dir, config=_serve_config(),
+                        cfg=ScheduleConfig(placement="locality", seed=7))
+    fleet.register("pfn", cfg, seed=0, warmup_batch=batch)
+    fleet.register("pfn2", cfg, seed=1)
+    for name in ("pfn", "pfn2"):
+        _, rep = fleet.invoke(name, batch)       # record wave
+        assert rep.processing_s > 0
+    yield fleet, store_dir, cfg, batch
+    fleet.close()
+
+
+@pytest.mark.slow
+def test_socket_fleet_output_matches_inproc(socket_fleet):
+    """The acceptance parity criterion: logits served across the process
+    boundary are byte-identical to an in-process fleet on the same
+    store."""
+    fleet, store_dir, cfg, batch = socket_fleet
+    # force_cold on both sides: each serve restores the same snapshot, so
+    # per-instance training state can't skew the comparison
+    out_sock, rep = fleet.invoke("pfn", batch, force_cold=True)
+    assert rep.load_vmm_s > 0
+    inproc = build_fleet(2, store_dir, config=_serve_config("inproc"),
+                         cfg=ScheduleConfig(placement="locality", seed=7))
+    try:
+        inproc.register("pfn", cfg, seed=0, warmup_batch=batch)
+        out_in, rep = inproc.invoke("pfn", batch, force_cold=True)
+        assert rep.load_vmm_s > 0
+    finally:
+        inproc.close()
+    assert np.asarray(out_sock).tobytes() == np.asarray(out_in).tobytes()
+
+
+@pytest.mark.slow
+def test_socket_fleet_cold_wave_and_stats_schema(socket_fleet):
+    fleet, _store_dir, _cfg, batch = socket_fleet
+    for name in ("pfn", "pfn2"):
+        fleet.scale_to_zero(name)
+    fleet.clear_caches()
+    fleet.rebalance()
+    fleet.reset_stats()
+    reports = []
+    invs = [fleet.submit(name, batch, force_cold=True)
+            for name in ("pfn", "pfn2", "pfn", "pfn2")]
+    for inv in invs:
+        _, rep = inv.result(timeout=180)
+        reports.append(rep)
+    assert all(r.load_vmm_s > 0 for r in reports)     # genuinely cold
+    st = fleet.stats()
+    assert st["transport"] == "socket"
+    assert st["placed"] == 4
+    assert set(st["nodes"]) == {"node-0", "node-1"}
+    for ns in st["nodes"].values():
+        tr = ns["transport"]
+        for key in ("wire_tx_bytes", "wire_rx_bytes", "remote_fetches",
+                    "origin_reads", "dead_owner_fallbacks", "fetch_rtt_s",
+                    "chunks_served", "compress_ratio"):
+            assert key in tr, f"transport stats missing {key!r}"
+        assert set(tr["fetch_rtt_s"]) == {"count", "sum", "p50", "p95"}
+
+
+@pytest.mark.slow
+def test_socket_fleet_warm_serves_without_restore(socket_fleet):
+    fleet, _store_dir, _cfg, batch = socket_fleet
+    _, first = fleet.invoke("pfn", batch)
+    _, rep = fleet.invoke("pfn", batch)
+    assert rep.load_vmm_s == 0.0                      # warm hit, no restore
+
+
+@pytest.mark.slow
+def test_socket_fleet_kill_reroutes_and_survivor_serves(tmp_path_factory):
+    """SIGTERM one child mid-flight: pending invocations resolve on the
+    survivor (lazy reroute), its PageServer death shows up as dead-owner
+    fallbacks at most, and nothing hangs."""
+    import jax
+    from repro.configs import SMOKES
+    from repro.launch import steps
+
+    store_dir = str(tmp_path_factory.mktemp("kstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(1))
+    fleet = build_fleet(2, store_dir, config=_serve_config(),
+                        cfg=ScheduleConfig(placement="locality", seed=7,
+                                           w_load=0.0))
+    try:
+        fleet.register("kfn", cfg, seed=0, warmup_batch=batch)
+        fleet.invoke("kfn", batch)                    # record + warm
+        # force_cold serializes restores behind the placement node's
+        # workers, so a burst is still pending when the kill lands
+        invs = [fleet.submit("kfn", batch, force_cold=True)
+                for _ in range(6)]
+        victim = max(fleet.stats()["placements"].items(),
+                     key=lambda kv: kv[1])[0]
+        fleet.kill_node(victim)
+        outs = [inv.result(timeout=180) for inv in invs]
+        assert len(outs) == 6
+        assert all(np.asarray(o).size > 0 for o, _rep in outs)
+        assert not fleet.nodes[victim].alive
+        assert fleet.n_rerouted >= 1
+        rerouted = [inv for inv in invs if len(inv.node_ids) > 1]
+        assert rerouted and all(inv.node_ids[0] == victim
+                                and inv.node_ids[-1] != victim
+                                for inv in rerouted)
+        # the survivor keeps serving fresh work
+        _, rep = fleet.invoke("kfn", batch)
+        assert rep.processing_s > 0
+    finally:
+        fleet.close()
+
+
+@pytest.mark.slow
+def test_socket_fleet_close_is_clean_and_idempotent(tmp_path_factory):
+    import jax
+    from repro.configs import SMOKES
+    from repro.launch import steps
+
+    store_dir = str(tmp_path_factory.mktemp("cstore"))
+    cfg = SMOKES["olmo-1b"]
+    batch = steps.make_batch(cfg, 16, 1, "train", jax.random.key(2))
+    fleet = build_fleet(2, store_dir, config=_serve_config(),
+                        cfg=ScheduleConfig(placement="locality"))
+    fleet.register("zfn", cfg, seed=0, warmup_batch=batch)
+    fleet.invoke("zfn", batch)
+    procs = [n._proc for n in fleet.nodes.values()]
+    fleet.close()
+    for p in procs:
+        assert not p.is_alive()
+    fleet.close()                                     # second close: no-op

@@ -1,0 +1,440 @@
+"""Real page transport (PR 10): chunk codec, wire protocol robustness,
+shm zero-copy installs, TransportSource fallbacks, and the TransferModel
+zero-missing-charge regression.
+
+No models here — every test runs over fabricated WS records, so the
+whole file is jax-free and fast.  The process-per-node fleet has its own
+file (test_procnode.py, marked slow)."""
+import os
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core import pagestore
+from repro.core.arena import PAGE
+from repro.core.reap import ReapConfig, trace_path, ws_path
+from repro.transport import (BadMagicError, ChunkHashMismatchError,
+                             PageClient, PageServer, TruncatedFrameError,
+                             WireError, decode_chunk, encode_chunk,
+                             shm_available)
+from repro.transport.wire import (HEADER, MAGIC, T_MANIFEST, recv_frame,
+                                  send_frame)
+
+
+def low_entropy_page(seed: int = 0) -> bytes:
+    """64-byte runs from a 4-symbol alphabet: compresses hard."""
+    rng = np.random.default_rng(seed)
+    return np.repeat(rng.integers(0, 4, size=64, dtype=np.uint8),
+                     PAGE // 64).tobytes()
+
+
+def random_page(seed: int = 0) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, size=PAGE, dtype=np.uint8).tobytes()
+
+
+# -- codec ----------------------------------------------------------------
+
+def test_codec_roundtrips_compressible_chunks():
+    block = low_entropy_page(1)
+    enc, payload = encode_chunk(block)
+    assert len(payload) < len(block)       # actually compressed
+    assert decode_chunk(enc, payload) == block
+
+
+def test_codec_ships_incompressible_chunks_raw():
+    block = random_page(2)
+    enc, payload = encode_chunk(block)
+    assert payload == block                # entropy probe said don't bother
+    assert decode_chunk(enc, payload) == block
+
+
+def test_codec_compress_false_is_raw():
+    block = low_entropy_page(3)
+    enc, payload = encode_chunk(block, compress=False)
+    assert payload == block
+    assert decode_chunk(enc, payload) == block
+
+
+# -- frame robustness -----------------------------------------------------
+
+def test_recv_frame_rejects_garbage_magic():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(HEADER.pack(b"XXXX", T_MANIFEST, 0))
+        with pytest.raises(BadMagicError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recv_frame_raises_on_truncated_frame():
+    a, b = socket.socketpair()
+    try:
+        # header promises 100 payload bytes, peer dies after 10
+        a.sendall(HEADER.pack(MAGIC, T_MANIFEST, 100) + b"x" * 10)
+        a.close()
+        with pytest.raises(TruncatedFrameError):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_recv_frame_rejects_oversized_length():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(HEADER.pack(MAGIC, T_MANIFEST, (1 << 28) + 1))
+        with pytest.raises(WireError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_send_recv_frame_roundtrip():
+    a, b = socket.socketpair()
+    try:
+        send_frame(a, T_MANIFEST, b"payload bytes")
+        ftype, payload = recv_frame(b)
+        assert ftype == T_MANIFEST and payload == b"payload bytes"
+    finally:
+        a.close()
+        b.close()
+
+
+# -- server/client over fabricated records --------------------------------
+
+def make_records(n_rec: int = 2, n_pages: int = 8) -> dict:
+    records = {}
+    for i in range(n_rec):
+        data = b"".join(low_entropy_page(100 * i + j)
+                        for j in range(n_pages))
+        hashes = [pagestore.chunk_hash(data[j * PAGE:(j + 1) * PAGE])
+                  for j in range(n_pages)]
+        records[f"rec_{i}"] = (list(range(n_pages)), data, hashes)
+    return records
+
+
+@pytest.fixture()
+def pair(tmp_path):
+    """A PageServer over in-heap records plus a connected client.  Tests
+    that need different server knobs build their own (see _serve)."""
+    records = make_records()
+    path = str(tmp_path / "page.sock")
+    server = PageServer(path, records.get, use_shm=False)
+    client = PageClient(path)
+    yield records, server, client
+    client.close()
+    server.close()
+
+
+def test_fetch_reassembles_byte_identical(pair):
+    records, _server, client = pair
+    for base, (pages, data, hashes) in records.items():
+        res = client.fetch(base)
+        assert res is not None
+        assert list(res.pages) == pages
+        assert res.hashes == hashes
+        assert res.assemble() == data
+
+
+def test_fetch_unknown_base_returns_none_and_connection_survives(pair):
+    records, _server, client = pair
+    assert client.fetch("no_such_record") is None
+    base = next(iter(records))
+    assert client.fetch(base).assemble() == records[base][1]
+
+
+def test_dedup_negotiation_ships_only_missing_chunks(pair):
+    records, server, client = pair
+    base = next(iter(records))
+    _pages, data, hashes = records[base]
+    have = set(hashes[::2])                  # claim every other chunk
+    res = client.fetch(base, have)
+    assert set(res.chunks) == set(hashes) - have
+    # the held chunks come from the local lookup, and the blob still
+    # reassembles exactly
+    local = {h: data[j * PAGE:(j + 1) * PAGE]
+             for j, h in enumerate(hashes) if h in have}
+    assert res.assemble(lookup=local.get) == data
+    # a fully-held fetch ships zero chunk bytes (negotiation only)
+    res2 = client.fetch(base, set(hashes))
+    assert res2.chunks == {}
+    assert server.stats.as_dict()["chunks_shipped"] == len(hashes) - len(have)
+
+
+def test_compressed_stream_is_smaller_and_verified(tmp_path):
+    records = make_records(n_rec=1, n_pages=16)
+    raw_rx = comp_rx = None
+    for compress in (False, True):
+        path = str(tmp_path / f"c{compress}.sock")
+        server = PageServer(path, records.get, use_shm=False,
+                            compress=compress)
+        client = PageClient(path)
+        try:
+            res = client.fetch("rec_0")
+            assert res.assemble() == records["rec_0"][1]
+            rx = client.stats.as_dict()["wire_rx_bytes"]
+        finally:
+            client.close()
+            server.close()
+        if compress:
+            comp_rx = rx
+        else:
+            raw_rx = rx
+    assert comp_rx < raw_rx
+
+
+def test_chunk_hash_mismatch_raises_before_surfacing(pair):
+    records, _server, client = pair
+    base = next(iter(records))
+    pages, data, hashes = records[base]
+    # corrupt the served bytes without updating the advertised hashes
+    records[base] = (pages, b"\0" * len(data), hashes)
+    with pytest.raises(ChunkHashMismatchError):
+        client.fetch(base)
+
+
+def test_responder_death_surfaces_as_wire_error(pair):
+    records, server, client = pair
+    base = next(iter(records))
+    assert client.fetch(base) is not None
+    server.close()
+    with pytest.raises((WireError, OSError)):
+        client.fetch(base)
+
+
+# -- shared-memory data plane ---------------------------------------------
+
+needs_shm = pytest.mark.skipif(not shm_available(),
+                               reason="multiprocessing.shared_memory "
+                                      "unavailable on this platform")
+
+
+class CaptureArena:
+    """install_block sink: copies the view out so parity survives the
+    segment's release."""
+
+    def __init__(self):
+        self.pages = None
+        self.block = None
+
+    def install_block(self, pages, block):
+        self.pages = np.array(pages, copy=True)
+        self.block = np.array(block, copy=True)
+
+
+@needs_shm
+def test_shm_fetch_install_is_byte_identical(tmp_path):
+    records = make_records(n_rec=1, n_pages=64)   # 256KB > inline_max=1
+    path = str(tmp_path / "shm.sock")
+    server = PageServer(path, records.get, use_shm=True, inline_max_bytes=1)
+    client = PageClient(path)
+    try:
+        arena = CaptureArena()
+        res = client.fetch_install("rec_0", arena)
+        assert res.transport == "shm"
+        assert res.shm_bytes == len(records["rec_0"][1])
+        pages, data, _hashes = records["rec_0"]
+        assert list(arena.pages) == pages
+        assert arena.block.tobytes() == data
+    finally:
+        client.close()
+        server.close()
+    # responder released its segments: nothing leaked in /dev/shm
+    assert server.stats.as_dict()["shm_responses"] == 1
+
+
+@needs_shm
+def test_shm_corruption_raises_and_skips_install(tmp_path):
+    records = make_records(n_rec=1, n_pages=64)
+    pages, data, hashes = records["rec_0"]
+    records["rec_0"] = (pages, b"\0" * len(data), hashes)
+    path = str(tmp_path / "shmbad.sock")
+    server = PageServer(path, records.get, use_shm=True, inline_max_bytes=1)
+    client = PageClient(path)
+    try:
+        arena = CaptureArena()
+        with pytest.raises(ChunkHashMismatchError):
+            client.fetch_install("rec_0", arena)
+        assert arena.block is None            # verification gated install
+    finally:
+        client.close()
+        server.close()
+
+
+@needs_shm
+def test_small_ws_stays_inline(tmp_path):
+    records = make_records(n_rec=1, n_pages=2)    # 8KB < 64KB inline_max
+    path = str(tmp_path / "small.sock")
+    server = PageServer(path, records.get, use_shm=True)
+    client = PageClient(path)
+    try:
+        res = client.fetch("rec_0")
+        assert res.transport == "inline"
+        assert res.assemble() == records["rec_0"][1]
+    finally:
+        client.close()
+        server.close()
+
+
+# -- TransportSource: owner sockets first, origin disk last ---------------
+
+def write_flat_record(tmp_path, name: str, n_pages: int = 4) -> str:
+    base = str(tmp_path / name)
+    np.save(trace_path(base), np.arange(n_pages, dtype=np.int64))
+    salt = sum(name.encode())
+    with open(ws_path(base), "wb") as f:
+        for i in range(n_pages):
+            f.write(bytes([(salt + i) % 256]) * PAGE)
+    return base
+
+
+@pytest.fixture()
+def source_env(tmp_path):
+    from repro.cluster.shardmap import ConsistentHashRing
+    from repro.transport.procnode import NodeSpec, TransportSource
+
+    sock_dir = str(tmp_path / "socks")
+    os.makedirs(sock_dir)
+    node_ids = ("node-a", "node-b")
+    spec = NodeSpec(node_id="node-a", store_dir=str(tmp_path),
+                    sock_dir=sock_dir, node_ids=node_ids, config=None)
+    ring = ConsistentHashRing(list(node_ids), vnodes=spec.vnodes)
+    source = TransportSource(spec, ring)
+    yield tmp_path, spec, ring, source
+    source.close()
+
+
+def _record_owned_by(tmp_path, ring, owner: str):
+    """A flat record whose ring owner is ``owner``."""
+    i = 0
+    while True:
+        name = f"srec_{i}"
+        if ring.owner(name) == owner:
+            return name, write_flat_record(tmp_path, name)
+        i += 1
+
+
+def test_source_pulls_from_live_owner_over_the_wire(source_env):
+    tmp_path, spec, ring, source = source_env
+    name, base = _record_owned_by(tmp_path, ring, "node-b")
+    cfg = ReapConfig(o_direct=False)
+    from repro.core.reap import _read_ws
+    served = {base: None}
+    p, d = _read_ws(base, cfg)
+    hashes = [pagestore.chunk_hash(d[j * PAGE:(j + 1) * PAGE])
+              for j in range(len(p))]
+    served[base] = (p, d, hashes)
+    server = PageServer(spec.sock_path("node-b"), served.get, use_shm=False)
+    try:
+        pages, data = source(base, cfg)
+        assert data == d and pages == [int(x) for x in p]
+        st = source.stats()
+        assert st["remote_fetches"] == 1 and st["origin_reads"] == 0
+        assert st["wire_rx_bytes"] > 0
+        assert st["fetch_rtt_s"]["count"] == 1
+    finally:
+        server.close()
+
+
+def test_source_dead_owner_falls_back_to_origin(source_env):
+    """No server listening at the owner's socket: the source counts a
+    dead-owner fallback and reads the origin record itself."""
+    tmp_path, _spec, ring, source = source_env
+    name, base = _record_owned_by(tmp_path, ring, "node-b")
+    cfg = ReapConfig(o_direct=False)
+    pages, data = source(base, cfg)
+    assert len(data) == 4 * PAGE               # origin read served it
+    st = source.stats()
+    assert st["dead_owner_fallbacks"] == 1
+    assert st["origin_reads"] == 1 and st["remote_fetches"] == 0
+
+
+def test_source_owner_mid_fetch_death_falls_back(source_env):
+    """The owner dies between fetches: the broken connection surfaces as
+    a dead-owner fallback, not an exception, and the origin serves."""
+    tmp_path, spec, ring, source = source_env
+    name, base = _record_owned_by(tmp_path, ring, "node-b")
+    cfg = ReapConfig(o_direct=False)
+    from repro.core.reap import _read_ws
+    p, d = _read_ws(base, cfg)
+    hashes = [pagestore.chunk_hash(d[j * PAGE:(j + 1) * PAGE])
+              for j in range(len(p))]
+    server = PageServer(spec.sock_path("node-b"),
+                        {base: (p, d, hashes)}.get, use_shm=False)
+    pages, data = source(base, cfg)
+    assert source.stats()["remote_fetches"] == 1
+    server.close()                             # owner process "dies"
+    pages, data = source(base, cfg)            # must not raise
+    assert len(data) == 4 * PAGE
+    st = source.stats()
+    assert st["dead_owner_fallbacks"] == 1 and st["origin_reads"] == 1
+
+
+def test_source_cold_owner_counts_remote_miss(source_env):
+    tmp_path, spec, ring, source = source_env
+    name, base = _record_owned_by(tmp_path, ring, "node-b")
+    server = PageServer(spec.sock_path("node-b"), lambda b: None,
+                        use_shm=False)
+    try:
+        pages, data = source(base, ReapConfig(o_direct=False))
+        assert len(data) == 4 * PAGE
+        st = source.stats()
+        assert st["remote_misses"] == 1 and st["origin_reads"] == 1
+        assert st["dead_owner_fallbacks"] == 0
+    finally:
+        server.close()
+
+
+# -- S1 regression: zero-missing fetch charges zero transfer time ---------
+
+def test_fully_deduped_fetch_charges_no_transfer_sleep(tmp_path):
+    """Two functions with identical page contents: the second remote
+    fetch finds every chunk already in the requester's L1, ships zero
+    bytes, and must charge zero modeled transfer seconds (it used to pay
+    the full per-transfer latency for a transfer that never happened)."""
+    from repro.cluster.shardmap import ConsistentHashRing
+    from repro.cluster.snapstore import ShardedSnapshotStore, TransferModel
+
+    ring = ConsistentHashRing(vnodes=32)
+    slept = []
+    store = ShardedSnapshotStore(ring, transfer=TransferModel(1e-3, 1.0),
+                                 reap=ReapConfig(o_direct=False),
+                                 sleep=slept.append)
+    caches = {n: store.attach(n) for n in ("na", "nb")}
+    cfg = ReapConfig(o_direct=False)
+
+    def twin_record(name: str) -> str:
+        # identical page bytes across both records -> full chunk dedup
+        base = str(tmp_path / name)
+        np.save(trace_path(base), np.arange(3, dtype=np.int64))
+        with open(ws_path(base), "wb") as f:
+            for i in range(3):
+                f.write(bytes([i]) * PAGE)
+        return base
+
+    # same-owner twins so one requester pays the wire once, dedups twice
+    bases, i = {}, 0
+    while len(bases) < 2:
+        name = f"twin_{i}"
+        if ring.owner(name) == "nb":
+            bases[name] = twin_record(name)
+        i += 1
+    b1, b2 = bases.values()
+    assert store.warm_owners(b1) + store.warm_owners(b2) == 2
+
+    caches["na"].fetch(b1, cfg)                # first fetch pays the wire
+    assert store.stats()["transfer_bytes"] == 3 * PAGE
+    assert slept == [store.transfer.cost_s(3 * PAGE)]
+
+    caches["na"].fetch(b2, cfg)                # twin: zero missing chunks
+    s = store.stats()
+    assert s["remote_fetches"] == 2
+    assert s["transfer_bytes"] == 3 * PAGE     # nothing new shipped
+    assert s["dedup_bytes_saved"] == 3 * PAGE
+    # THE regression: the zero-byte fetch charges zero seconds
+    assert slept == [store.transfer.cost_s(3 * PAGE), 0.0]
+    assert s["transfer_s"] == store.transfer.cost_s(3 * PAGE)
